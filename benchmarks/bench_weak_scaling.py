@@ -1,0 +1,31 @@
+"""Paper Fig 5 — execution time for graphs of different sizes (weak scaling
+by SCALE at fixed shard count; paper: RMAT-25..29 on 32 nodes)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import generators
+from repro.core.boruvka_dist import minimum_spanning_forest
+
+
+def main(scales=(10, 11, 12, 13, 14), kind: str = "rmat"):
+    print(f"# Fig5 — time vs SCALE ({kind}, optimized engine, in-memory)")
+    print(f"{'scale':>6s} {'vertices':>10s} {'edges':>10s} {'time_s':>8s} "
+          f"{'Medges/s':>9s} {'rounds':>7s}")
+    rows = []
+    for sc in scales:
+        g = generators.generate(kind, sc, seed=1)
+        minimum_spanning_forest(g)                    # warm compile
+        t0 = time.perf_counter()
+        res, stats = minimum_spanning_forest(g)
+        dt = time.perf_counter() - t0
+        meps = g.num_edges / dt / 1e6
+        print(f"{sc:6d} {g.num_vertices:10d} {g.num_edges:10d} "
+              f"{dt:8.2f} {meps:9.2f} {stats.rounds:7d}")
+        rows.append(dict(scale=sc, seconds=dt, edges=g.num_edges,
+                         meps=meps))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

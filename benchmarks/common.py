@@ -1,0 +1,19 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, repeats: int = 1, **kw):
+    """Returns (result, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,83 @@
+"""§Roofline — three-term analysis from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/artifacts/dryrun]
+
+Per (arch × shape) on the single-pod mesh:
+    compute    = jaxpr_FLOPs/device / 197e12           (bf16 peak)
+    memory     = HBM bytes/device   / 819e9
+    collective = collective bytes/device / (3 links × 50e9)
+
+FLOPs are the scan-aware jaxpr count (includes remat recompute; XLA's own
+cost_analysis undercounts loop bodies).  HBM bytes = max(XLA's fused
+'bytes accessed', live-buffer floor from memory_analysis) — the fusion-naive
+jaxpr byte count is also recorded as an upper bound.  Collective bytes come
+from the post-SPMD HLO (output sizes of all-gather/all-reduce/…), divided
+across the 3 usable ICI links of a v5e torus axis-pair.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+LINKS = 3
+
+
+def load(dir_: str, mesh_tag: str = "pod16x16"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dir_, f"*__{mesh_tag}.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    nd = rec["n_devices"]
+    flops_dev = rec["jaxpr_flops_global"] / nd
+    xla_bytes = max(rec.get("bytes_per_device", 0.0), 0.0)
+    live_floor = rec["memory"]["peak_bytes"]
+    bytes_dev = max(xla_bytes, live_floor)
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / (LINKS * LINK_BW)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    model_dev = rec["model_flops"] / nd
+    return dict(
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        dominant=dom[1], t_dominant=dom[0],
+        useful_ratio=model_dev / max(flops_dev, 1.0),
+        roofline_frac=t_c / max(t_c, t_m, t_x),
+        flops_dev=flops_dev, bytes_dev=bytes_dev, coll_dev=coll_dev,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    print(f"# Roofline terms per (arch x shape), mesh={args.mesh}")
+    print(f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'collective_s':>12s} {'dominant':>10s} {'MF/HF':>6s} "
+          f"{'roofline%':>9s}")
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} -- {r['status']}: "
+                  f"{r['reason'][:60]}")
+            continue
+        t = terms(r)
+        print(f"{r['arch']:24s} {r['shape']:12s} {t['t_compute']:10.4f} "
+              f"{t['t_memory']:10.4f} {t['t_collective']:12.4f} "
+              f"{t['dominant']:>10s} {t['useful_ratio']:6.2f} "
+              f"{100 * t['roofline_frac']:8.1f}%")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import (bench_loggops, bench_msg_size,  # noqa: E402
+                        bench_optimizations, bench_profiling, bench_scaling,
+                        bench_weak_scaling)
+from benchmarks.common import csv_line  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller scales (CI-sized)")
+    args = ap.parse_args()
+    fast = args.fast
+    csv = []
+
+    t0 = time.perf_counter()
+    rows = bench_optimizations.main(scale=8 if fast else 9)
+    base, final = rows[0], rows[-1]
+    csv.append(csv_line("fig2_optimizations", 1e6 * (time.perf_counter() - t0),
+                        f"base={base['seconds']:.2f}s "
+                        f"final={final['seconds']:.2f}s "
+                        f"speedup={base['seconds'] / final['seconds']:.2f}x"))
+    print()
+
+    t0 = time.perf_counter()
+    rows = bench_profiling.main(scale=8 if fast else 9)
+    csv.append(csv_line("fig3_profiling", 1e6 * (time.perf_counter() - t0),
+                        f"reproc_final="
+                        f"{1 - rows[-1]['productive'] / rows[-1]['processed']:.2f}"))
+    print()
+
+    t0 = time.perf_counter()
+    rows = bench_scaling.main(scale=11 if fast else 13,
+                              shard_counts=(1, 2, 4) if fast else (1, 2, 4, 8))
+    ws = rows[-1]["work_scaling"]
+    csv.append(csv_line("table2_scaling", 1e6 * (time.perf_counter() - t0),
+                        f"work_scaling_P{rows[-1]['shards']}={ws:.2f}x"))
+    print()
+
+    t0 = time.perf_counter()
+    r = bench_msg_size.main(scale=8 if fast else 9, shards=4)
+    first = r["intervals"][0] + 1e-9
+    csv.append(csv_line("fig4_msg_size", 1e6 * (time.perf_counter() - t0),
+                        f"last/first={r['intervals'][-1] / first:.2f}"))
+    print()
+
+    t0 = time.perf_counter()
+    rows = bench_weak_scaling.main(
+        scales=(9, 10, 11) if fast else (10, 11, 12, 13))
+    csv.append(csv_line("fig5_weak_scaling", 1e6 * (time.perf_counter() - t0),
+                        f"Medges/s@max={rows[-1]['meps']:.2f}"))
+    print()
+
+    t0 = time.perf_counter()
+    bench_loggops.main()
+    csv.append(csv_line("loggops_model", 1e6 * (time.perf_counter() - t0),
+                        "paper-sec5-future-work"))
+    print()
+
+    print("=" * 24, "ROOFLINE (single-pod, from dry-run artifacts)",
+          "=" * 12)
+    try:
+        from benchmarks import roofline
+        import sys as _sys
+        argv = _sys.argv
+        _sys.argv = ["roofline"]
+        roofline.main()
+        _sys.argv = ["roofline", "--mesh", "multipod2x16x16"]
+        print()
+        print("=" * 24, "ROOFLINE (multi-pod 2x16x16)", "=" * 29)
+        roofline.main()
+        _sys.argv = argv
+    except Exception as e:  # noqa: BLE001 — artifacts may be absent in CI
+        print(f"(roofline skipped: {e})")
+    print()
+
+    print("name,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b
+"""
+import argparse
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_driver.main([
+        "--arch", args.arch, "--smoke", "--batch", str(args.batch),
+        "--prompt-len", "48", "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    main()

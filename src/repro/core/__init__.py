@@ -1,0 +1,22 @@
+"""The paper's primary contribution: distributed GHS/Boruvka MST in JAX.
+
+Two engines share one total order over edges (packed weight+id keys), so
+their outputs are bit-identical and oracle-checkable:
+
+  * :mod:`repro.core.ghs_message` — faithful message-driven GHS
+    (paper §2-3: queues, levels, relaxed Test ordering, hashing,
+    message compression, aggregated exchange, silence termination).
+  * :mod:`repro.core.boruvka_dist` — TPU-native synchronous engine
+    (segment-min + hooking/pointer-doubling; beyond-paper).
+"""
+from repro.core.graph import Graph, build_csr, preprocess
+from repro.core.generators import GENERATORS, generate
+from repro.core.kruskal_ref import ForestResult, boruvka_numpy, kruskal
+from repro.core.mst_api import minimum_spanning_forest
+from repro.core.params import DEFAULT_PARAMS, GHSParams
+
+__all__ = [
+    "Graph", "build_csr", "preprocess", "GENERATORS", "generate",
+    "ForestResult", "boruvka_numpy", "kruskal", "minimum_spanning_forest",
+    "DEFAULT_PARAMS", "GHSParams",
+]

@@ -1,0 +1,224 @@
+"""Optimized synchronous distributed Borůvka/GHS engine (beyond-paper, §3 of DESIGN).
+
+Re-formulates GHS for SPMD hardware: per round, every fragment's minimum
+outgoing edge (MOE) is a segment-min over (weight-bits, edge-id) — GHS's
+``Test``/``Report`` message waves collapse into two scatter-min passes and one
+fused ``pmin`` collective; fragment merging is min-hooking + pointer doubling
+(the ``Connect``/``Initiate`` waves).  The paper's point-to-point short-message
+traffic — which it identifies as its limiting factor (§4.2) — is off the
+critical path entirely.
+
+Edges are block-distributed across devices (`shard_map` over axis ``"x"``);
+the fragment-label array ``comp`` is replicated (paper layout: vertices are
+block-distributed, but labels are small — int32 per vertex).
+
+Tie-breaking uses the two-word (weight_bits:u32, edge_id:u32) total order, the
+same order as :mod:`repro.core.keys` — see DESIGN.md §2/C3 for why this stays
+in 32-bit lanes instead of the paper's 64-bit ``special_id``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import union_find
+from repro.core.graph import Graph
+from repro.core.kruskal_ref import ForestResult
+from repro.core.params import DEFAULT_PARAMS, GHSParams
+
+INF32 = np.uint32(0xFFFFFFFF)
+_AXIS = "x"
+
+
+# ---------------------------------------------------------------------------
+# One Borůvka round (runs per shard; axis_name=None → single device)
+# ---------------------------------------------------------------------------
+
+def _segmin_scatter(n: int, idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Per-segment min via XLA scatter-min (default path)."""
+    return jnp.full((n,), INF32, jnp.uint32).at[idx].min(val)
+
+
+def _segmin_pallas(n: int, idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Per-segment min via the Pallas sort+scan kernel (TPU hot-spot path;
+    interpret-mode on CPU, validated bit-equal to the scatter path)."""
+    from repro.kernels.segment_min import ops as segops
+    return segops.segment_min(val, idx.astype(jnp.int32), num_segments=n,
+                              use_pallas=True)
+
+
+def _round_body(
+    comp: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    wbits: jnp.ndarray,
+    eid: jnp.ndarray,
+    *,
+    axis_name: Optional[str],
+    use_pallas: bool = False,
+):
+    """One round: elect MOE per fragment, hook, compress, relabel."""
+    n = comp.shape[0]
+    pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
+    segmin = _segmin_pallas if use_pallas else _segmin_scatter
+
+    cs = comp[src]
+    cd = comp[dst]
+    alive = (cs != cd) & (wbits != INF32)
+    wb = jnp.where(alive, wbits, INF32)
+
+    # Phase 1: best weight per fragment (local scatter-min, global pmin).
+    bw = jnp.minimum(segmin(n, cs, wb), segmin(n, cd, wb))
+    bw = pmin(bw)
+
+    # Phase 2: tie-break by unique edge id among weight-matching edges.
+    cand_s = jnp.where(alive & (wb == bw[cs]), eid, INF32)
+    cand_d = jnp.where(alive & (wb == bw[cd]), eid, INF32)
+    be = jnp.minimum(segmin(n, cs, cand_s), segmin(n, cd, cand_d))
+    be = pmin(be)
+
+    # Winners: the elected MOE edges (each fragment elects exactly one).
+    winners = alive & ((be[cs] == eid) | (be[cd] == eid))
+
+    # Merge: min-hooking + pointer doubling (GHS Connect/Initiate collapse).
+    hi = jnp.maximum(cs, cd).astype(jnp.uint32)
+    lo = jnp.minimum(cs, cd).astype(jnp.uint32)
+    parent = union_find.hook_min(n, hi, lo, winners)
+    parent = pmin(parent)
+    parent = union_find.pointer_double(parent)
+    new_comp = parent[comp]
+
+    done = jnp.all(bw == INF32)
+    return new_comp, winners, done
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BoruvkaStats:
+    rounds: int = 0
+    compactions: int = 0
+    edges_scanned: int = 0          # Σ active (padded) edges per round
+    active_history: tuple = ()      # active edge count per round (Fig 4 analogue)
+
+
+def _make_round_fn(mesh: Optional[Mesh], use_pallas: bool = False) -> Callable:
+    if mesh is None:
+        return jax.jit(partial(_round_body, axis_name=None,
+                               use_pallas=use_pallas))
+    fn = jax.shard_map(
+        partial(_round_body, axis_name=_AXIS, use_pallas=use_pallas),
+        mesh=mesh,
+        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS)),
+        out_specs=(P(), P(_AXIS), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def _pad_pow2(arrs, multiple: int, fill_vals):
+    m = arrs[0].shape[0]
+    target = multiple
+    while target < m:
+        target *= 2
+    pad = target - m
+    return [
+        np.concatenate([a, np.full(pad, f, a.dtype)]) if pad else a
+        for a, f in zip(arrs, fill_vals)
+    ]
+
+
+def minimum_spanning_forest(
+    graph: Graph,
+    params: GHSParams = DEFAULT_PARAMS,
+    mesh: Optional[Mesh] = None,
+    max_rounds: Optional[int] = None,
+) -> tuple[ForestResult, BoruvkaStats]:
+    """Run the optimized engine; returns the forest + execution stats."""
+    n, m = graph.num_vertices, graph.num_edges
+    num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+    chunk = max(8 * num_shards, num_shards)
+
+    src = graph.src.astype(np.int32)
+    dst = graph.dst.astype(np.int32)
+    wbits = graph.weight.view(np.uint32).copy()
+    eid = np.arange(m, dtype=np.uint32)
+    if np.any(wbits == INF32):
+        raise ValueError("weights collide with the INF sentinel")
+
+    round_fn = _make_round_fn(mesh, use_pallas=params.use_pallas)
+    comp_sharding = (
+        NamedSharding(mesh, P()) if mesh is not None else None
+    )
+    edge_sharding = (
+        NamedSharding(mesh, P(_AXIS)) if mesh is not None else None
+    )
+
+    def put_edges(arrs):
+        arrs = _pad_pow2(arrs, chunk, [0, 0, INF32, INF32])
+        if edge_sharding is not None:
+            return [jax.device_put(a, edge_sharding) for a in arrs]
+        return [jnp.asarray(a) for a in arrs]
+
+    comp = np.arange(n, dtype=np.uint32)
+    comp_dev = (
+        jax.device_put(comp, comp_sharding) if comp_sharding is not None
+        else jnp.asarray(comp)
+    )
+    src_d, dst_d, wb_d, eid_d = put_edges([src, dst, wbits, eid])
+    # Host mirror of the active edge set (for compaction + winner mapping).
+    active = np.arange(m, dtype=np.int64)
+
+    mask = np.zeros(m, dtype=bool)
+    stats = BoruvkaStats()
+    history = []
+    cap = max_rounds or (n + 2)
+
+    for rnd in range(cap):
+        comp_dev, winners, done = round_fn(comp_dev, src_d, dst_d, wb_d, eid_d)
+        stats.rounds += 1
+        stats.edges_scanned += int(src_d.shape[0])
+        history.append(len(active))
+        if bool(done):
+            break
+        w = np.asarray(winners)
+        if w.any():
+            eids = np.asarray(eid_d)[w]
+            mask[eids[eids != INF32].astype(np.int64)] = True
+        # C1 analogue: lazy compaction every check_frequency rounds.
+        if (
+            params.compaction == "pow2"
+            and (rnd + 1) % max(params.check_frequency, 1) == 0
+        ):
+            comp_h = np.asarray(comp_dev)
+            keep = comp_h[src[active]] != comp_h[dst[active]]
+            if not keep.all():
+                active = active[keep]
+                stats.compactions += 1
+                src_d, dst_d, wb_d, eid_d = put_edges(
+                    [src[active], dst[active],
+                     wbits[active], eid[active].astype(np.uint32)]
+                )
+    else:
+        raise RuntimeError("Borůvka engine failed to converge")
+
+    comp_final = np.asarray(comp_dev)
+    ncomp = int(np.unique(comp_final).size)
+    total = float(graph.weight[mask].sum(dtype=np.float64))
+    res = ForestResult(
+        total_weight=total,
+        edge_mask=mask,
+        num_components=ncomp,
+        num_tree_edges=int(mask.sum()),
+    )
+    res.check_consistent(n)
+    stats.active_history = tuple(history)
+    return res, stats

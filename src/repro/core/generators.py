@@ -1,0 +1,154 @@
+"""Graph generators used by the paper's evaluation (§4): RMAT, SSCA2, Uniform.
+
+All follow the paper's conventions: ``SCALE`` = log2(num_vertices), average
+vertex degree 32 (i.e. 16·N undirected edge samples), weights uniform in the
+open interval (0, 1).  Generators return raw (possibly loop/multi-edge)
+samples; callers run :func:`repro.core.graph.preprocess` (§3.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph, preprocess
+
+_WEIGHT_EPS = np.float32(1e-9)
+
+
+def _weights(rng: np.random.Generator, m: int) -> np.ndarray:
+    w = rng.random(m, dtype=np.float32)
+    # open interval (0, 1)
+    return np.clip(w, _WEIGHT_EPS, np.float32(1.0) - _WEIGHT_EPS)
+
+
+def rmat(
+    scale: int,
+    avg_degree: int = 32,
+    *,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+) -> Graph:
+    """R-MAT recursive-quadrant sampler (Chakrabarti et al., Graph500 params)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * avg_degree // 2
+    d = 1.0 - a - b - c
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    p = np.array([a, b, c, d])
+    cum = np.cumsum(p)
+    for level in range(scale):
+        r = rng.random(m)
+        quad = np.searchsorted(cum, r, side="right").astype(np.int64)
+        quad = np.minimum(quad, 3)
+        src = (src << 1) | (quad >> 1)
+        dst = (dst << 1) | (quad & 1)
+    # Graph500-style vertex scrambling so low-id hubs are dispersed across the
+    # block distribution (otherwise process 0 owns nearly all heavy vertices).
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    return preprocess(src, dst, _weights(rng, m), n)
+
+
+def ssca2(
+    scale: int,
+    avg_degree: int = 32,
+    *,
+    seed: int = 0,
+    max_clique: int | None = None,
+) -> Graph:
+    """SSCA2-style graph: randomly interconnected cliques (Bader & Madduri).
+
+    Vertices are partitioned into cliques of size U[1, max_clique]; all
+    intra-clique edges exist; consecutive cliques are linked by a few random
+    inter-clique edges (guaranteeing the clique chain is connected, matching
+    the benchmark's interconnection step).
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    if max_clique is None:
+        # With all-pairs intra-clique edges, E[deg] ≈ (2/3)·max_clique for
+        # uniform clique sizes; solve for the paper's avg degree 32.
+        max_clique = max(2, int(avg_degree * 3 / 2))
+    sizes = []
+    total = 0
+    while total < n:
+        s = int(rng.integers(1, max_clique + 1))
+        s = min(s, n - total)
+        sizes.append(s)
+        total += s
+    starts = np.cumsum([0] + sizes[:-1])
+    srcs, dsts = [], []
+    for s0, sz in zip(starts, sizes):
+        if sz > 1:
+            u, v = np.triu_indices(sz, k=1)
+            srcs.append(u + s0)
+            dsts.append(v + s0)
+    # Inter-clique links: connect clique i to a uniformly chosen earlier clique
+    # (chain + chords), a few links each.
+    n_cliques = len(sizes)
+    if n_cliques > 1:
+        links_per = 3
+        for i in range(1, n_cliques):
+            js = rng.integers(0, i, size=links_per)
+            for j in js:
+                u = starts[i] + rng.integers(0, sizes[i])
+                v = starts[j] + rng.integers(0, sizes[j])
+                srcs.append(np.array([u]))
+                dsts.append(np.array([v]))
+    src = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
+    dst = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    return preprocess(src, dst, _weights(rng, src.shape[0]), n)
+
+
+def uniform_random(
+    scale: int, avg_degree: int = 32, *, seed: int = 0
+) -> Graph:
+    """Erdős–Rényi-style G(n, m): endpoints chosen uniformly at random."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * avg_degree // 2
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    return preprocess(src, dst, _weights(rng, m), n)
+
+
+def disconnected(
+    scale: int, components: int = 4, avg_degree: int = 8, *, seed: int = 0
+) -> Graph:
+    """Deliberately disconnected graph (forest test — paper §3.2 / C5)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    comp = max(1, components)
+    size = n // comp
+    srcs, dsts = [], []
+    for ci in range(comp):
+        base = ci * size
+        sz = size if ci < comp - 1 else n - base
+        if sz < 2:
+            continue
+        m = max(sz * avg_degree // 2, sz - 1)
+        u = rng.integers(0, sz, size=m) + base
+        v = rng.integers(0, sz, size=m) + base
+        # a spanning path so each block is internally connected
+        path = np.arange(base, base + sz - 1)
+        srcs.extend([u, path])
+        dsts.extend([v, path + 1])
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    return preprocess(src, dst, _weights(rng, src.shape[0]), n)
+
+
+GENERATORS = {
+    "rmat": rmat,
+    "ssca2": ssca2,
+    "random": uniform_random,
+    "disconnected": disconnected,
+}
+
+
+def generate(kind: str, scale: int, **kw) -> Graph:
+    return GENERATORS[kind](scale, **kw)

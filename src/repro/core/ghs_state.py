@@ -1,0 +1,311 @@
+"""State containers + host-side initialization for the faithful GHS engine.
+
+Vertices are block-distributed across shards (paper §3: "All graph vertices
+are sequentially distributed in blocks among the processes"); each shard holds
+the CSR adjacency of its owned vertices (both directions), weight-sorted per
+vertex so GHS's "probe Basic edges lightest-first" is a cursor scan.
+
+Message encoding (paper §3.5 / C3): a message is ``LANES`` uint32 words.
+Compressed layout (5 lanes = 160 bits ≈ the paper's 152-bit long message):
+
+    [0] hdr  = type(3b) | state(1b) | level(28b)
+    [1] src  vertex (global id)
+    [2] dst  vertex (global id)
+    [3] fw   weight bits   (fragment id / report weight, hi word)
+    [4] fe   tiebreak lane (fragment id / report weight, lo word)
+
+Uncompressed ablation layout (8 lanes = 256 bits): one field per lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.graph import Graph, build_csr
+from repro.core.params import GHSParams
+
+INF32 = np.uint32(0xFFFFFFFF)
+
+# Message types (3 bits).
+CONNECT, INITIATE, TEST, ACCEPT, REJECT, REPORT, CHANGE_CORE = range(7)
+MSG_NAMES = ("Connect", "Initiate", "Test", "Accept", "Reject", "Report",
+             "ChangeCore")
+# Vertex states.
+SLEEPING, FIND, FOUND = 0, 1, 2
+# Edge states.
+BASIC, BRANCH, REJECTED = 0, 1, 2
+
+# Hash mixing constants (32-bit adaptation of the paper's
+# ((u << 32) | v) mod T — see DESIGN.md §2/C2).
+HASH_K1 = np.uint32(2654435761)
+HASH_K2 = np.uint32(2246822519)
+
+
+def hash_slot(lv, u, table_size):
+    """Identical arithmetic under numpy and jax.numpy (uint32 wraparound)."""
+    mixed = (lv.astype(np.uint32) * HASH_K1) ^ (u.astype(np.uint32) * HASH_K2)
+    return (mixed % np.uint32(table_size)).astype(np.int32)
+
+
+class ShardState(NamedTuple):
+    """Per-shard GHS state. All arrays have NO leading shard axis here; the
+    driver stacks them along axis 0 for shard_map."""
+
+    # --- vertex state (nb,) ---
+    sn: np.ndarray          # i32 vertex state
+    ln: np.ndarray          # u32 fragment level
+    fnw: np.ndarray         # u32 fragment id (weight bits)
+    fne: np.ndarray         # u32 fragment id (tiebreak)
+    find_count: np.ndarray  # i32
+    in_branch: np.ndarray   # i32 CSR position or -1
+    best_edge: np.ndarray   # i32 CSR position or -1
+    best_w: np.ndarray      # u32
+    best_e: np.ndarray      # u32
+    test_edge: np.ndarray   # i32 CSR position or -1
+    # --- adjacency (static topology) ---
+    indptr: np.ndarray      # (nb+1,) i32, weight-sorted windows
+    nbr: np.ndarray         # (eb,) i32 global neighbor
+    ceid: np.ndarray        # (eb,) i32 canonical edge id
+    ewb: np.ndarray         # (eb,) u32 weight bits
+    etb: np.ndarray         # (eb,) u32 tiebreak (canonical id)
+    byid: np.ndarray        # (eb,) i32 window positions sorted by neighbor id
+    se: np.ndarray          # (eb,) i32 edge state (mutable)
+    # --- hash table (static) ---
+    h_lv: np.ndarray        # (T,) i32 local vertex key (-1 empty)
+    h_u: np.ndarray         # (T,) i32 neighbor key
+    h_pos: np.ndarray       # (T,) i32 CSR position
+    # --- queues ---
+    mq: np.ndarray          # (qcap, lanes) u32 main queue ring
+    mq_head: np.ndarray     # i64 scalar
+    mq_tail: np.ndarray     # i64
+    tq: np.ndarray          # (qcap, lanes) u32 test queue ring
+    tq_head: np.ndarray     # i64
+    tq_tail: np.ndarray     # i64
+    # --- outgoing rings, one per destination shard ---
+    og: np.ndarray          # (S, ocap, lanes) u32
+    og_head: np.ndarray     # (S,) i64
+    og_tail: np.ndarray     # (S,) i64
+    # --- inbox (filled by exchange) ---
+    inbox: np.ndarray       # (S, xcap, lanes) u32
+    in_cnt: np.ndarray      # (S,) i32
+    # --- flags / counters ---
+    err: np.ndarray         # i32 bitmask (1=queue ovfl, 2=hash miss, 4=logic)
+    halted: np.ndarray      # i32 fragments that reported w=best=inf
+    n_processed: np.ndarray    # i64 messages popped (incl. repeats)
+    n_productive: np.ndarray   # i64 messages that were not postponed
+    n_sent_remote: np.ndarray  # i64 messages that crossed shards
+    n_sent_local: np.ndarray   # i64 loopback messages
+
+
+@dataclasses.dataclass(frozen=True)
+class GHSTopology:
+    """Static layout info shared by the driver and the superstep builder."""
+
+    num_shards: int
+    block: int          # vertices per shard
+    nb: int             # == block
+    eb: int             # padded adjacency entries per shard
+    qcap: int
+    ocap: int
+    xcap: int           # exchange bucket capacity (paper MAX_MSG_SIZE)
+    tsize: int          # hash table slots
+    lanes: int          # 5 compressed / 8 uncompressed
+    num_vertices: int
+    num_edges: int
+
+
+def encode_messages(
+    lanes: int, mtype, level, state, src, dst, fw, fe
+) -> np.ndarray:
+    """Vectorized numpy encoder (init-time Connect(0) wave)."""
+    n = len(np.atleast_1d(src))
+    out = np.zeros((n, lanes), dtype=np.uint32)
+    if lanes == 5:
+        hdr = (np.uint32(mtype) | (np.uint32(state) << np.uint32(3))
+               | (np.asarray(level, np.uint32) << np.uint32(4)))
+        out[:, 0] = hdr
+        out[:, 1] = src
+        out[:, 2] = dst
+        out[:, 3] = fw
+        out[:, 4] = fe
+    else:
+        out[:, 0] = mtype
+        out[:, 1] = level
+        out[:, 2] = state
+        out[:, 3] = src
+        out[:, 4] = dst
+        out[:, 5] = fw
+        out[:, 6] = fe
+    return out
+
+
+def _build_hash_table(lv: np.ndarray, u: np.ndarray, pos: np.ndarray,
+                      tsize: int):
+    """Vectorized linear-probe insertion (Knuth 6.4, paper §3.3)."""
+    h_lv = np.full(tsize, -1, np.int32)
+    h_u = np.full(tsize, -1, np.int32)
+    h_pos = np.full(tsize, -1, np.int32)
+    idx = hash_slot(lv, u, tsize).astype(np.int32)
+    pending = np.arange(lv.shape[0], dtype=np.int32)
+    for _probe in range(tsize + 1):
+        if pending.size == 0:
+            break
+        slots = idx[pending]
+        empty = h_pos[slots] < 0
+        cand = pending[empty]
+        cslots = slots[empty]
+        # first writer wins per slot this round
+        uniq, first = np.unique(cslots, return_index=True)
+        winners = cand[first]
+        h_lv[uniq] = lv[winners]
+        h_u[uniq] = u[winners]
+        h_pos[uniq] = pos[winners]
+        placed = np.zeros(lv.shape[0], dtype=bool)
+        placed[winners] = True
+        pending = pending[~placed[pending]]
+        idx[pending] = (idx[pending] + 1) % tsize
+    else:
+        raise RuntimeError("hash table build did not converge")
+    return h_lv, h_u, h_pos
+
+
+def init_shards(
+    graph: Graph, num_shards: int, params: GHSParams
+) -> tuple[GHSTopology, list[ShardState]]:
+    """Partition the graph, pre-sort adjacency by weight, build hash tables,
+    wake every vertex (spontaneous awakening) and enqueue its Connect(0)."""
+    n = graph.num_vertices
+    csr = build_csr(graph)
+    wkey = graph.packed_keys()  # uint64 host-side sort key
+    block = -(-n // num_shards)
+    lanes = 5 if params.compress_messages else 8
+
+    # per-shard adjacency sizes
+    deg = csr.degree()
+    shard_edges = [
+        int(deg[s * block: min(n, (s + 1) * block)].sum())
+        for s in range(num_shards)
+    ]
+    eb = max(max(shard_edges), 1)
+    qcap = max(2048, 4 * eb + 4 * block)
+    ocap = qcap
+    xcap = max(int(params.max_msg_size), 64)
+    tsize = (max(64, int(eb * params.hash_table_factor) | 1)
+             if params.use_hashing else 1)
+
+    topo = GHSTopology(
+        num_shards=num_shards, block=block, nb=block, eb=eb, qcap=qcap,
+        ocap=ocap, xcap=xcap, tsize=tsize, lanes=lanes,
+        num_vertices=n, num_edges=graph.num_edges,
+    )
+
+    shards = []
+    for s in range(num_shards):
+        v0, v1 = s * block, min(n, (s + 1) * block)
+        nloc = v1 - v0
+        # Gather adjacency of owned vertices, re-sorted by weight per vertex.
+        parts_nbr, parts_eid, ptr = [], [], [0]
+        for v in range(v0, v1):
+            a, b = csr.indptr[v], csr.indptr[v + 1]
+            eids = csr.edge_index[a:b]
+            order = np.argsort(wkey[eids], kind="stable")
+            parts_nbr.append(csr.neighbor[a:b][order])
+            parts_eid.append(eids[order])
+            ptr.append(ptr[-1] + (b - a))
+        nbr = (np.concatenate(parts_nbr) if parts_nbr else
+               np.zeros(0, np.int32)).astype(np.int32)
+        eid = (np.concatenate(parts_eid) if parts_eid else
+               np.zeros(0, np.int32)).astype(np.int32)
+        mloc = nbr.shape[0]
+        indptr = np.zeros(block + 1, np.int32)
+        indptr[1:nloc + 1] = np.asarray(ptr[1:], np.int32)
+        indptr[nloc + 1:] = indptr[nloc]
+        # pad adjacency
+        pad = eb - mloc
+        nbr = np.concatenate([nbr, np.full(pad, -1, np.int32)])
+        eid = np.concatenate([eid, np.zeros(pad, np.int32)])
+        if graph.num_edges:
+            ewb = graph.weight.view(np.uint32)[eid].copy()
+        else:
+            ewb = np.full(eb, INF32, np.uint32)
+        etb = eid.astype(np.uint32)
+        ewb[mloc:] = INF32
+        etb[mloc:] = INF32
+        # per-window neighbor-id order (binary-search ablation)
+        byid = np.arange(eb, dtype=np.int32)
+        for lv in range(nloc):
+            a, b = indptr[lv], indptr[lv + 1]
+            byid[a:b] = a + np.argsort(nbr[a:b], kind="stable")
+        # hash table over (local vertex, neighbor) -> position
+        if params.use_hashing:
+            owner_lv = np.repeat(np.arange(nloc, dtype=np.int32),
+                                 np.diff(indptr[:nloc + 1]))
+            h_lv, h_u, h_pos = _build_hash_table(
+                owner_lv, nbr[:mloc], np.arange(mloc, dtype=np.int32), tsize)
+        else:
+            h_lv = np.full(tsize, -1, np.int32)
+            h_u = np.full(tsize, -1, np.int32)
+            h_pos = np.full(tsize, -1, np.int32)
+
+        se = np.zeros(eb, np.int32)
+        sn = np.full(block, FOUND, np.int32)
+        ln = np.zeros(block, np.uint32)
+        # Spontaneous awakening: mark min edge Branch, queue Connect(0).
+        msgs_by_dest: list[list[np.ndarray]] = [[] for _ in range(num_shards)]
+        local_msgs = []
+        for lv in range(nloc):
+            a, b = indptr[lv], indptr[lv + 1]
+            if a == b:
+                continue  # isolated vertex: its own component
+            se[a] = BRANCH
+            dest = int(nbr[a])
+            msg = encode_messages(lanes, CONNECT, 0, 0, v0 + lv, dest, 0, 0)[0]
+            ds = dest // block
+            if ds == s:
+                local_msgs.append(msg)
+            else:
+                msgs_by_dest[ds].append(msg)
+
+        mq = np.zeros((qcap, lanes), np.uint32)
+        k = len(local_msgs)
+        if k:
+            mq[:k] = np.stack(local_msgs)
+        og = np.zeros((num_shards, ocap, lanes), np.uint32)
+        og_tail = np.zeros(num_shards, np.int32)
+        for ds, msgs in enumerate(msgs_by_dest):
+            if msgs:
+                og[ds, :len(msgs)] = np.stack(msgs)
+                og_tail[ds] = len(msgs)
+
+        shards.append(ShardState(
+            sn=sn, ln=ln,
+            fnw=np.zeros(block, np.uint32), fne=np.zeros(block, np.uint32),
+            find_count=np.zeros(block, np.int32),
+            in_branch=np.full(block, -1, np.int32),
+            best_edge=np.full(block, -1, np.int32),
+            best_w=np.full(block, INF32, np.uint32),
+            best_e=np.full(block, INF32, np.uint32),
+            test_edge=np.full(block, -1, np.int32),
+            indptr=indptr, nbr=nbr, ceid=eid, ewb=ewb, etb=etb, byid=byid,
+            se=se, h_lv=h_lv, h_u=h_u, h_pos=h_pos,
+            mq=mq, mq_head=np.int32(0), mq_tail=np.int32(k),
+            tq=np.zeros((qcap, lanes), np.uint32),
+            tq_head=np.int32(0), tq_tail=np.int32(0),
+            og=og, og_head=np.zeros(num_shards, np.int32), og_tail=og_tail,
+            inbox=np.zeros((num_shards, xcap, lanes), np.uint32),
+            in_cnt=np.zeros(num_shards, np.int32),
+            err=np.int32(0), halted=np.int32(0),
+            n_processed=np.int32(0), n_productive=np.int32(0),
+            n_sent_remote=np.int32(0), n_sent_local=np.int32(0),
+        ))
+    return topo, shards
+
+
+def stack_shards(shards: list[ShardState]) -> ShardState:
+    """Stack per-shard states along a leading axis for shard_map."""
+    return ShardState(*[
+        np.stack([getattr(sh, f) for sh in shards])
+        for f in ShardState._fields
+    ])

@@ -1,0 +1,129 @@
+"""Graph containers + paper §3.1 preprocessing (self-loop / multi-edge removal).
+
+Canonical storage is an undirected edge list ``(src < dst, weight)`` in numpy
+(host memory — graphs can exceed device memory; shards are materialized on
+demand).  The vertex-centric faithful engine additionally uses a CSR adjacency
+over BOTH directions, matching the paper's per-process CRS layout (§3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import keys as keys_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Preprocessed undirected weighted graph (no loops, no multi-edges)."""
+
+    num_vertices: int
+    src: np.ndarray      # (M,) int32, src < dst
+    dst: np.ndarray      # (M,) int32
+    weight: np.ndarray   # (M,) float32, in (0, 1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def packed_keys(self) -> np.ndarray:
+        """uint64 sortable (weight ‖ edge_id) keys — see keys.py (C3/C6)."""
+        eid = np.arange(self.num_edges, dtype=np.uint32)
+        return keys_lib.pack_keys_np(self.weight, eid)
+
+    def validate(self) -> None:
+        assert self.src.dtype == np.int32 and self.dst.dtype == np.int32
+        assert self.weight.dtype == np.float32
+        if self.num_edges:
+            assert int(self.src.min()) >= 0
+            assert int(self.dst.max()) < self.num_vertices
+            assert np.all(self.src < self.dst), "edges must be canonical (u < v)"
+            pair = pair_ids(self.src, self.dst, self.num_vertices)
+            assert np.unique(pair).size == pair.size, "multi-edges present"
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRAdjacency:
+    """Both-direction adjacency; ``edge_index`` maps back to canonical edges."""
+
+    indptr: np.ndarray      # (N+1,) int64
+    neighbor: np.ndarray    # (2M,) int32
+    edge_index: np.ndarray  # (2M,) int32
+
+    def degree(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+def pair_ids(u: np.ndarray, v: np.ndarray, num_vertices: int) -> np.ndarray:
+    """Unique uint64 id per vertex pair (assumes u, v < num_vertices < 2**32)."""
+    return (u.astype(np.uint64) << np.uint64(32)) | v.astype(np.uint64)
+
+
+def preprocess(
+    src: np.ndarray, dst: np.ndarray, weight: np.ndarray, num_vertices: int
+) -> Graph:
+    """Paper §3.1: drop self-loops, canonicalize u<v, dedup multi-edges.
+
+    Among duplicates we keep the minimum-weight copy (the only
+    correctness-preserving choice for MST on the underlying multigraph).
+    """
+    src = np.asarray(src).astype(np.int64)
+    dst = np.asarray(dst).astype(np.int64)
+    weight = np.asarray(weight, dtype=np.float32)
+    keep = src != dst
+    src, dst, weight = src[keep], dst[keep], weight[keep]
+    u = np.minimum(src, dst)
+    v = np.maximum(src, dst)
+    pid = pair_ids(u, v, num_vertices)
+    # Sort by (pair, weight) then keep the first occurrence of each pair.
+    order = np.lexsort((weight, pid))
+    pid, u, v, weight = pid[order], u[order], v[order], weight[order]
+    first = np.ones(pid.shape[0], dtype=bool)
+    first[1:] = pid[1:] != pid[:-1]
+    g = Graph(
+        num_vertices=int(num_vertices),
+        src=u[first].astype(np.int32),
+        dst=v[first].astype(np.int32),
+        weight=weight[first],
+    )
+    return g
+
+
+def build_csr(graph: Graph) -> CSRAdjacency:
+    """Both-direction CSR; neighbor lists sorted by neighbor id (paper §3.3's
+    "sorted incident edges" variant, which we get for free by construction)."""
+    n, m = graph.num_vertices, graph.num_edges
+    ends = np.concatenate([graph.src, graph.dst])
+    nbrs = np.concatenate([graph.dst, graph.src])
+    eidx = np.concatenate([np.arange(m, dtype=np.int64)] * 2)
+    order = np.lexsort((nbrs, ends))
+    ends, nbrs, eidx = ends[order], nbrs[order], eidx[order]
+    counts = np.bincount(ends, minlength=n).astype(np.int64)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRAdjacency(
+        indptr=indptr,
+        neighbor=nbrs.astype(np.int32),
+        edge_index=eidx.astype(np.int32),
+    )
+
+
+def pad_edges(
+    graph: Graph, multiple: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad (src, dst, key, valid) so the edge count divides ``multiple``.
+
+    Padding edges are (0, 0) with INF_KEY and valid=False — inert under
+    min-reductions, so shards stay rectangular (SPMD requirement).
+    """
+    m = graph.num_edges
+    pad = (-m) % multiple
+    src = np.concatenate([graph.src, np.zeros(pad, np.int32)])
+    dst = np.concatenate([graph.dst, np.zeros(pad, np.int32)])
+    key = np.concatenate(
+        [graph.packed_keys(), np.full(pad, keys_lib.INF_KEY, np.uint64)]
+    )
+    valid = np.concatenate([np.ones(m, bool), np.zeros(pad, bool)])
+    return src, dst, key, valid

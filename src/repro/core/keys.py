@@ -1,0 +1,80 @@
+"""Packed 64-bit edge keys — the paper's weight + ``special_id`` tiebreak (C3/C6).
+
+The GHS algorithm requires all edge weights to be distinct.  The paper (§3.2)
+appends a ``special_id`` to the weight; §3.5 then compresses the message
+encoding.  We adapt both ideas into a single sortable ``uint64``:
+
+    key = (ieee754_bits(weight_f32) << 32) | unique_edge_id_32
+
+Weights are in the open interval (0, 1), i.e. positive finite floats, whose
+IEEE-754 bit patterns are monotonically ordered as unsigned integers.  The low
+32 bits carry a globally unique edge id (the canonical edge index), so
+
+  * ``min`` over keys == lexicographic min over (weight, tiebreak)  — GHS's
+    distinct-weight precondition holds for ANY input weights, and
+  * the comparison is a single integer ``min`` — VPU/MXU friendly, unlike the
+    paper's 64-bit concatenated-vertex ``special_id`` which needs a second
+    word.  (Adaptation note: this caps the graph at 2**32 canonical edges per
+    key space; the paper's rank trick (§3.5 last paragraph) is superseded —
+    see DESIGN.md §2.)
+
+``INF_KEY`` (all ones) is the identity for min-reductions ("no outgoing
+edge"), playing the role of the paper's Report(∞).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Identity element for min-reductions over packed keys.
+INF_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
+# Any key with this weight-field is treated as "no edge".
+INF_BITS = np.uint32(0xFFFFFFFF)
+
+
+def pack_keys_np(weight: np.ndarray, edge_id: np.ndarray) -> np.ndarray:
+    """numpy: pack float32 weights + uint32 edge ids into sortable uint64."""
+    w = np.asarray(weight, dtype=np.float32)
+    if np.any(w < 0):
+        raise ValueError("packed keys require non-negative weights")
+    bits = w.view(np.uint32).astype(np.uint64)
+    eid = np.asarray(edge_id).astype(np.uint64) & np.uint64(0xFFFFFFFF)
+    return (bits << np.uint64(32)) | eid
+
+
+def unpack_weight_np(key: np.ndarray) -> np.ndarray:
+    bits = (np.asarray(key, dtype=np.uint64) >> np.uint64(32)).astype(np.uint32)
+    return bits.view(np.float32)
+
+
+def unpack_edge_id_np(key: np.ndarray) -> np.ndarray:
+    return (np.asarray(key, dtype=np.uint64) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def pack_keys(weight: jnp.ndarray, edge_id: jnp.ndarray) -> jnp.ndarray:
+    """jnp: pack float32 weights + int edge ids into sortable uint64."""
+    bits = jax_f32_bits(weight).astype(jnp.uint64)
+    eid = edge_id.astype(jnp.uint64) & jnp.uint64(0xFFFFFFFF)
+    return (bits << jnp.uint64(32)) | eid
+
+
+def unpack_edge_id(key: jnp.ndarray) -> jnp.ndarray:
+    return (key & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+
+
+def unpack_weight(key: jnp.ndarray) -> jnp.ndarray:
+    bits = (key >> jnp.uint64(32)).astype(jnp.uint32)
+    return jax_bits_f32(bits)
+
+
+def jax_f32_bits(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.asarray(w, jnp.float32).view(jnp.uint32)
+
+
+def jax_bits_f32(bits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.asarray(bits, jnp.uint32).view(jnp.float32)
+
+
+def is_inf_key(key) -> np.ndarray:
+    """True where a key denotes "no edge" (works for np and jnp arrays)."""
+    return key == INF_KEY

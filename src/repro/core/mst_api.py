@@ -1,0 +1,38 @@
+"""Public MST API — unified front-end over the two engines."""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.core import boruvka_dist, ghs_message
+from repro.core.graph import Graph
+from repro.core.kruskal_ref import ForestResult
+from repro.core.params import DEFAULT_PARAMS, GHSParams
+
+METHODS = ("ghs", "boruvka")
+
+
+def minimum_spanning_forest(
+    graph: Graph,
+    method: str = "boruvka",
+    params: GHSParams = DEFAULT_PARAMS,
+    mesh: Optional[Mesh] = None,
+    **kw,
+) -> tuple[ForestResult, object]:
+    """Compute the minimum spanning forest of ``graph``.
+
+    method='ghs'     — paper-faithful message-driven GHS (the reproduction).
+    method='boruvka' — TPU-native synchronous engine (beyond-paper optimized).
+
+    Both return (ForestResult, stats); the forest is bit-identical between
+    engines (and to the Kruskal oracle) because all three use the same packed
+    (weight, edge-id) total order.
+    """
+    if method == "ghs":
+        return ghs_message.minimum_spanning_forest(
+            graph, params=params, mesh=mesh, **kw)
+    if method == "boruvka":
+        return boruvka_dist.minimum_spanning_forest(
+            graph, params=params, mesh=mesh, **kw)
+    raise ValueError(f"unknown method {method!r}; options: {METHODS}")

@@ -1,0 +1,42 @@
+"""Algorithm parameters — names and defaults follow the paper §3.6."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GHSParams:
+    """Tunables of the distributed MST engines.
+
+    Paper §3.6 defaults, with TPU-adaptation notes:
+      * ``max_msg_size``       — capacity (in messages) of each per-destination
+        aggregation bucket per superstep (paper: 10000 bytes).
+      * ``sending_frequency``  — supersteps between bucket flushes.  In the BSP
+        engine every superstep ends with one fused exchange, so the knob
+        becomes how many local process passes run between exchanges.
+      * ``check_frequency``    — supersteps between drains of the deferred
+        ``Test`` queue (faithful engine) / rounds between edge compactions
+        (optimized engine).  This is the paper's key contribution (C1).
+      * ``empty_iter_cnt_to_break`` — supersteps between global silence checks
+        (termination allreduce).  The BSP engine can afford to check every
+        superstep (the psum rides the existing collective), but we keep the
+        knob for fidelity.
+      * ``hash_table_factor``  — hash table slots per local edge (paper:
+        5 * 11 / 13 ≈ 4.23).
+    """
+
+    max_msg_size: int = 4096
+    sending_frequency: int = 1
+    check_frequency: int = 5
+    empty_iter_cnt_to_break: int = 1
+    hash_table_factor: float = 5 * 11 / 13
+    # Optimization toggles (Fig 2 ablation ladder).
+    use_hashing: bool = True          # C2: hash edge lookup vs linear search
+    relaxed_test_queue: bool = True   # C1: separate Test queue
+    compress_messages: bool = True    # C3: bit-packed message words
+    # Optimized-engine extras (beyond paper).
+    compaction: str = "pow2"          # 'none' | 'pow2' host-side edge compaction
+    use_pallas: bool = False          # route segment-min through the Pallas kernel
+
+
+DEFAULT_PARAMS = GHSParams()

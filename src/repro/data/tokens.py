@@ -1,0 +1,84 @@
+"""Deterministic data pipeline: synthetic LM batches + binary token files.
+
+Both sources are *stateless-resumable*: batch t is a pure function of
+(seed, step), so checkpoint restore at step N reproduces the exact stream
+(no iterator state to persist beyond the step counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    kind: str = "synthetic"     # synthetic | file
+    path: Optional[str] = None  # uint16/uint32 .bin for kind=file
+    vocab: int = 32000
+    seed: int = 0
+
+
+class SyntheticTokens:
+    """Zipf-ish synthetic token stream (harder than uniform for loss curves)."""
+
+    def __init__(self, cfg: DataConfig, batch: int, seq: int,
+                 host_id: int = 0, num_hosts: int = 1):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        assert batch % num_hosts == 0
+        self.local_batch = batch // num_hosts
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            (self.cfg.seed, step, self.host_id))
+        z = rng.zipf(1.3, size=(self.local_batch, self.seq + 1))
+        toks = (z % self.cfg.vocab).astype(np.int32)
+        return dict(tokens=toks[:, :-1], labels=toks[:, 1:])
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class TokenFile:
+    """Memory-mapped flat token file, sharded across hosts by stride."""
+
+    def __init__(self, cfg: DataConfig, batch: int, seq: int,
+                 host_id: int = 0, num_hosts: int = 1,
+                 dtype=np.uint16):
+        self.data = np.memmap(cfg.path, dtype=dtype, mode="r")
+        self.batch = batch
+        self.seq = seq
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.local_batch = batch // num_hosts
+        self.tokens_per_batch = self.local_batch * (seq + 1)
+        n_windows = (len(self.data) - 1) // self.tokens_per_batch
+        self.n_windows = max(n_windows, 1)
+
+    def batch_at(self, step: int) -> dict:
+        w = (step * self.num_hosts + self.host_id) % self.n_windows
+        start = w * self.tokens_per_batch
+        chunk = np.asarray(
+            self.data[start:start + self.tokens_per_batch + 1])
+        if chunk.size < self.tokens_per_batch + 1:
+            chunk = np.pad(chunk,
+                           (0, self.tokens_per_batch + 1 - chunk.size))
+        toks = chunk[:self.tokens_per_batch].reshape(
+            self.local_batch, self.seq + 1).astype(np.int32)
+        return dict(tokens=toks[:, :-1], labels=toks[:, 1:])
+
+
+def make_dataset(cfg: DataConfig, batch: int, seq: int, **kw):
+    if cfg.kind == "synthetic":
+        return SyntheticTokens(cfg, batch, seq, **kw)
+    if cfg.kind == "file":
+        return TokenFile(cfg, batch, seq, **kw)
+    raise ValueError(cfg.kind)

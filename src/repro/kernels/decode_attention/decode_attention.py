@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: single-token decode attention over a KV cache.
+
+Flash-decode adapted to GQA on TPU: the query tile packs the whole GQA head
+*group* for one KV head — (group, D) — so each KV tile streamed from the
+cache is read exactly once per group (the decode step is pure
+memory-bandwidth; KV reuse across the group is the only lever).  Online
+softmax state persists in VMEM scratch across the sequential KV grid axis.
+
+Variable cache fill is handled with a per-batch ``length`` operand: cache
+positions >= length are masked (the serving path appends tokens in place).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale, bk, num_kv):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[0], s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _final():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bk", "interpret"))
+def decode_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, length: jnp.ndarray, *,
+    scale: float | None = None, bk: int = 512, interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B, Hq, D) one token; k, v: (B, Hkv, S, D) cache; length: (B,)."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    bk = min(bk, s)
+    assert s % bk == 0
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, s // bk)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bk=bk,
+                          num_kv=s // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, hq, d)

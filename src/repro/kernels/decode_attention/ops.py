@@ -1,0 +1,91 @@
+"""Decode-attention dispatch: Pallas kernel / chunked-XLA / naive paths."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import ref
+from repro.kernels.decode_attention.decode_attention import decode_attention \
+    as decode_attention_pallas
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "chunk"))
+def chunked_decode_attention(q, k, v, length, *, scale: float | None = None,
+                             chunk: int = 2048):
+    """XLA path: lax.scan over cache chunks (O(chunk) live logits)."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nk = s // chunk
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, hkv, g, d)
+    kc = jnp.moveaxis(k.reshape(b, hkv, nk, chunk, d), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, hkv, nk, chunk, d), 2, 0)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        logits = jnp.einsum("bhgd,bhkd->bhgk", qg, kj,
+                            preferred_element_type=jnp.float32)
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = kpos[None, None, None, :] < length[:, None, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgk,bhkd->bhgd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def grouped_decode_attention(q, k, v, length, *, scale: float | None = None):
+    """Single-einsum decode attention without KV repeat (GQA grouped).
+
+    The (B,H,S) logits are small even at 500k; with the cache sequence dim
+    sharded over the TP axis, GSPMD lowers the softmax to local partials +
+    a (B,H)-sized all-reduce — distributed flash-decode for free."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    # Operands stay in the cache dtype (bf16 on TPU) with f32 accumulation:
+    # casting K/V to f32 makes XLA materialize an f32 copy of the WHOLE
+    # stacked cache inside the decode loop (measured +9 GiB on phi3).
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    mask = jnp.arange(s)[None, None, None, :] < length[:, None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def decode_attention(q, k, v, length, *, scale: float | None = None,
+                     use_pallas: bool = False, interpret: bool = True,
+                     chunk: int = 2048):
+    if use_pallas:
+        return decode_attention_pallas(q, k, v, length, scale=scale,
+                                       interpret=interpret)
+    return grouped_decode_attention(q, k, v, length, scale=scale)

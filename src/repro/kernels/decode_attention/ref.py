@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention with a masked cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention(q, k, v, length, *, scale: float | None = None):
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) * scale
+    mask = jnp.arange(s)[None, None, :] < length[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vf).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: batched linear-probe hash lookup (paper §3.3 / C2).
+
+The paper replaces linear edge search with an open-addressing hash keyed on
+the (receiver, sender) vertex pair — an 18% node-time win.  This kernel is
+the batched TPU version: a block of queries probes the table in lock-step,
+each probe being one vectorized gather + compare on the VPU; queries that
+hit (or reach an empty slot) freeze while the rest continue.
+
+VMEM residency: tables are sharded with vertices, so the per-core slice at
+pod scale (~2^24 edges / 256 chips × load factor ≈ 4.2 × 12 B ≈ 3.3 MB)
+fits VMEM — the whole table is one BlockSpec block; queries stream through
+the grid.  Hash mixing matches :func:`repro.core.ghs_state.hash_slot` (the
+32-bit adaptation of the paper's ``((u << 32) | v) mod size``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.ghs_state import HASH_K1, HASH_K2
+
+MAX_PROBES = 64
+
+
+def _lookup_kernel(hlv_ref, hu_ref, hpos_ref, qlv_ref, qu_ref, out_ref,
+                   *, tsize, max_probes):
+    qlv = qlv_ref[...]
+    qu = qu_ref[...]
+    mixed = (qlv.astype(jnp.uint32) * HASH_K1) ^ (qu.astype(jnp.uint32)
+                                                  * HASH_K2)
+    idx = (mixed % np.uint32(tsize)).astype(jnp.int32)
+
+    def probe(_, carry):
+        idx, done, pos = carry
+        klv = hlv_ref[idx]          # vectorized VMEM gather
+        ku = hu_ref[idx]
+        kpos = hpos_ref[idx]
+        hit = (klv == qlv) & (ku == qu)
+        empty = kpos < 0
+        pos = jnp.where(~done & hit, kpos, pos)
+        done = done | hit | empty
+        idx = jnp.where(done, idx, (idx + 1) % np.int32(tsize))
+        return idx, done, pos
+
+    q = qlv.shape[0]
+    _, _, pos = jax.lax.fori_loop(
+        0, max_probes, probe,
+        (idx, jnp.zeros((q,), jnp.bool_), jnp.full((q,), -1, jnp.int32)))
+    out_ref[...] = pos
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_probes",
+                                             "interpret"))
+def hash_lookup(
+    h_lv: jnp.ndarray, h_u: jnp.ndarray, h_pos: jnp.ndarray,
+    q_lv: jnp.ndarray, q_u: jnp.ndarray, *,
+    block: int = 512, max_probes: int = MAX_PROBES, interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched (receiver, sender) → CSR-position lookup. -1 = miss."""
+    tsize = h_lv.shape[0]
+    q = q_lv.shape[0]
+    pad = (-q) % block
+    if pad:
+        q_lv = jnp.concatenate([q_lv, jnp.full(pad, -1, jnp.int32)])
+        q_u = jnp.concatenate([q_u, jnp.full(pad, -1, jnp.int32)])
+    grid = ((q + pad) // block,)
+    out = pl.pallas_call(
+        functools.partial(_lookup_kernel, tsize=tsize,
+                          max_probes=max_probes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tsize,), lambda i: (0,)),   # table resident
+            pl.BlockSpec((tsize,), lambda i: (0,)),
+            pl.BlockSpec((tsize,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),   # queries stream
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q + pad,), jnp.int32),
+        interpret=interpret,
+    )(h_lv, h_u, h_pos, q_lv, q_u)
+    return out[:q]

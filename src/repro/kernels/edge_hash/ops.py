@@ -1,0 +1,25 @@
+"""jit'd wrapper for the edge_hash kernel (build on host, probe on device)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ghs_state import _build_hash_table
+from repro.kernels.edge_hash import ref
+from repro.kernels.edge_hash.edge_hash import hash_lookup
+
+
+def build_table(lv: np.ndarray, u: np.ndarray, pos: np.ndarray, tsize: int):
+    """Host-side vectorized linear-probe insertion (init-time, paper §3.3)."""
+    return _build_hash_table(lv.astype(np.int32), u.astype(np.int32),
+                             pos.astype(np.int32), tsize)
+
+
+def lookup(table, q_lv, q_u, *, use_pallas: bool = True,
+           interpret: bool = True):
+    h_lv, h_u, h_pos = (jnp.asarray(t) for t in table)
+    q_lv = jnp.asarray(q_lv, jnp.int32)
+    q_u = jnp.asarray(q_u, jnp.int32)
+    if use_pallas:
+        return hash_lookup(h_lv, h_u, h_pos, q_lv, q_u, interpret=interpret)
+    return ref.hash_lookup(h_lv, h_u, h_pos, q_lv, q_u)

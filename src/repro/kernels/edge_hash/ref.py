@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the edge_hash lookup kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ghs_state import HASH_K1, HASH_K2
+
+
+def hash_lookup(h_lv, h_u, h_pos, q_lv, q_u, max_probes: int = 64):
+    tsize = h_lv.shape[0]
+    mixed = (q_lv.astype(jnp.uint32) * HASH_K1) ^ (q_u.astype(jnp.uint32)
+                                                   * HASH_K2)
+    idx = (mixed % np.uint32(tsize)).astype(jnp.int32)
+
+    def probe(_, carry):
+        idx, done, pos = carry
+        hit = (h_lv[idx] == q_lv) & (h_u[idx] == q_u)
+        empty = h_pos[idx] < 0
+        pos = jnp.where(~done & hit, h_pos[idx], pos)
+        done = done | hit | empty
+        idx = jnp.where(done, idx, (idx + 1) % np.int32(tsize))
+        return idx, done, pos
+
+    _, _, pos = jax.lax.fori_loop(
+        0, max_probes, probe,
+        (idx, jnp.zeros(q_lv.shape, jnp.bool_),
+         jnp.full(q_lv.shape, -1, jnp.int32)))
+    return pos

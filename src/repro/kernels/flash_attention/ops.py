@@ -1,0 +1,163 @@
+"""Attention dispatch: Pallas kernel (TPU target) / chunked XLA / naive.
+
+``attention`` is the single entry point used by the model zoo:
+  * ``use_pallas=True``  — the flash kernel (validated in interpret mode).
+  * big sequences        — ``chunked_attention``: O(S) memory online-softmax
+    as a lax.scan over KV chunks.  Pure XLA, differentiable, and what the
+    train/serve steps lower for the dry-runs (no S×S materialization, so the
+    roofline memory term reflects a production attention).
+  * small sequences      — naive einsum (fast compile for smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "chunk"))
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      scale: float | None = None, chunk: int = 1024):
+    """Online-softmax attention, scanning KV chunks. GQA-aware (no repeat)."""
+    b, hq, s, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0
+    nk = skv // chunk
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, hkv, g, s, d)
+    kc = k.reshape(b, hkv, nk, chunk, d)
+    vc = v.reshape(b, hkv, nk, chunk, d)
+    qpos = jnp.arange(s)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj,
+                            preferred_element_type=jnp.float32)
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False),
+        (m0, l0, a0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "q_chunk",
+                                             "kv_chunk"))
+def blocked_attention(q, k, v, *, causal: bool = True,
+                      scale: float | None = None, q_chunk: int = 512,
+                      kv_chunk: int = 1024):
+    """Double-blocked online-softmax attention (flash algorithm in XLA):
+    outer scan over Q blocks, inner scan over KV blocks — live logits are
+    (B,H,q_chunk,kv_chunk), so 32k×32k never materializes."""
+    b, hq, s, d = q.shape
+    q_chunk = min(q_chunk, s)
+    assert s % q_chunk == 0
+    nq = s // q_chunk
+    qb = jnp.moveaxis(q.reshape(b, hq, nq, q_chunk, d), 2, 0)
+
+    def do_q(args):
+        qi, idx = args
+        qpos = idx * q_chunk + jnp.arange(q_chunk)
+        return _chunked_attention_pos(qi, k, v, qpos, causal=causal,
+                                      scale=scale, chunk=kv_chunk)
+
+    out = jax.lax.map(do_q, (qb, jnp.arange(nq)))
+    return jnp.moveaxis(out, 0, 2).reshape(b, hq, s, d)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "chunk"))
+def _chunked_attention_pos(q, k, v, qpos, *, causal, scale, chunk):
+    """chunked_attention with explicit global q positions (for q-blocking)."""
+    b, hq, s, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0
+    nk = skv // chunk
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, hkv, g, s, d)
+    kc = k.reshape(b, hkv, nk, chunk, d)
+    vc = v.reshape(b, hkv, nk, chunk, d)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj,
+                            preferred_element_type=jnp.float32)
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False),
+        (m0, l0, a0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (handles 4352-style lengths)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              use_pallas: bool = False, interpret: bool = True,
+              chunk: int = 1024):
+    """Main entry point. Shapes: q (B,Hq,S,D); k,v (B,Hkv,S,D)."""
+    s = q.shape[2]
+    skv = k.shape[2]
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               interpret=interpret)
+    if s <= 1024:
+        return ref.attention(q, k, v, causal=causal, scale=scale)
+    if s < 2048:
+        return chunked_attention(q, k, v, causal=causal, scale=scale,
+                                 chunk=_pick_chunk(skv, 512))
+    return blocked_attention(q, k, v, causal=causal, scale=scale,
+                             q_chunk=_pick_chunk(s, 512),
+                             kv_chunk=_pick_chunk(skv, 512))

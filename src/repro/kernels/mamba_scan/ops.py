@@ -1,0 +1,18 @@
+"""Selective-scan dispatch: Pallas kernel / jnp scan."""
+from __future__ import annotations
+
+from repro.kernels.mamba_scan import ref
+from repro.kernels.mamba_scan.mamba_scan import selective_scan \
+    as selective_scan_pallas
+
+
+def selective_scan(x, dt, b, c, a, d, *, use_pallas: bool = False,
+                   interpret: bool = True, chunk: int = 128,
+                   return_state: bool = False):
+    if use_pallas and not return_state:
+        return selective_scan_pallas(x, dt, b, c, a, d, chunk=chunk,
+                                     interpret=interpret)
+    return ref.selective_scan(x, dt, b, c, a, d, return_state=return_state)
+
+
+selective_scan_step = ref.selective_scan_step

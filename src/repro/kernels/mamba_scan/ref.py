@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the Mamba selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan(x, dt, b, c, a, d, *, return_state: bool = False,
+                   chunk: int = 128):
+    """x, dt: (B, T, D); b, c: (B, T, N); a: (D, N); d: (D,).
+
+    Checkpointed time-chunking bounds backward residuals (see rwkv6/ref)."""
+    af = a.astype(jnp.float32)
+    df = d.astype(jnp.float32)
+    t = x.shape[1]
+    ck = min(chunk, t)
+    while t % ck:
+        ck -= 1
+    nc = t // ck
+
+    def one_batch(x, dt, b, c):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt[:, None] * af)
+            h = decay * h + (dtt * xt)[:, None] * bt[None, :]
+            y = jnp.sum(h * ct[None, :], axis=1) + df * xt
+            return h, y
+
+        @jax.checkpoint
+        def chunk_fn(h, xs):
+            return jax.lax.scan(step, h, xs)
+
+        h0 = jnp.zeros(af.shape, jnp.float32)
+        dd, nn = x.shape[-1], b.shape[-1]
+        xs = (x.astype(jnp.float32).reshape(nc, ck, dd),
+              dt.astype(jnp.float32).reshape(nc, ck, dd),
+              b.astype(jnp.float32).reshape(nc, ck, nn),
+              c.astype(jnp.float32).reshape(nc, ck, nn))
+        h, y = jax.lax.scan(chunk_fn, h0, xs)
+        return y.reshape(t, dd), h
+
+    y, h = jax.vmap(one_batch)(x, dt, b, c)
+    if return_state:
+        return y.astype(x.dtype), h
+    return y.astype(x.dtype)
+
+
+def selective_scan_step(h, x, dt, b, c, a, d):
+    """Single decode step: h (B,D,N); x,dt (B,D); b,c (B,N)."""
+    decay = jnp.exp(dt[:, :, None] * a[None].astype(jnp.float32))
+    h = decay * h + (dt * x)[:, :, None] * b[:, None, :]
+    y = jnp.sum(h * c[:, None, :], axis=2) + d[None].astype(jnp.float32) * x
+    return h, y

@@ -1,0 +1,15 @@
+"""WKV6 dispatch: Pallas kernel / jnp scan."""
+from __future__ import annotations
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6.rwkv6 import wkv6 as wkv6_pallas
+
+
+def wkv6(r, k, v, w, u, *, use_pallas: bool = False, interpret: bool = True,
+         chunk: int = 128, return_state: bool = False):
+    if use_pallas and not return_state:
+        return wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return ref.wkv6(r, k, v, w, u, return_state=return_state)
+
+
+wkv6_step = ref.wkv6_step

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (per-step lax.scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r, k, v, w, u, *, return_state: bool = False, chunk: int = 128):
+    """r,k,v,w: (BH, T, D); u: (BH, D). Returns (BH, T, D) [, final state].
+
+    Time is processed in checkpointed chunks: backward recomputes the steps
+    of one chunk at a time, so residual memory is O(T/chunk · state) instead
+    of O(T · state) — the XLA analogue of the Pallas kernel's chunking."""
+    bh, t, d = r.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+
+    def one_head(r, k, v, w, u):
+        def step(s, x):
+            rt, kt, vt, wt = x
+            kv = kt[:, None] * vt[None, :]
+            out = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)
+            return wt[:, None] * s + kv, out
+
+        @jax.checkpoint
+        def chunk_fn(s, xs):
+            return jax.lax.scan(step, s, xs)
+
+        s0 = jnp.zeros((d, d), jnp.float32)
+        xs = tuple(z.astype(jnp.float32).reshape(nc, c, d)
+                   for z in (r, k, v, w))
+        s, out = jax.lax.scan(chunk_fn, s0, xs)
+        return out.reshape(t, d), s
+
+    out, s = jax.vmap(one_head)(r, k, v, w, u.astype(jnp.float32))
+    if return_state:
+        return out.astype(r.dtype), s
+    return out.astype(r.dtype)
+
+
+def wkv6_step(s, r, k, v, w, u):
+    """Single decode step: state (BH,D,D), token inputs (BH,D)."""
+    kv = k[:, :, None] * v[:, None, :]
+    out = jnp.sum((s + u[:, :, None] * kv) * r[:, :, None], axis=1)
+    s = w[:, :, None] * s + kv
+    return s, out

@@ -1,0 +1,50 @@
+"""jit'd wrappers for segment_min: sorted-scan Pallas path + scatter path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_min import ref
+from repro.kernels.segment_min.segment_min import (
+    INF_U32, segmented_min_scan)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block",
+                                             "interpret"))
+def segment_min_sorted(
+    val: jnp.ndarray, seg: jnp.ndarray, *, num_segments: int,
+    block: int = 1024, interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-segment min for SORTED ``seg`` via the Pallas scan kernel.
+
+    The run-end elements of the scan hold each segment's min; the final
+    scatter is conflict-free (each output slot written exactly once)."""
+    m = seg.shape[0]
+    pad = (-m) % block
+    if pad:
+        seg = jnp.concatenate([seg, jnp.full(pad, np.int32(0x7FFFFFF0), jnp.int32)])
+        val = jnp.concatenate([val, jnp.full(pad, np.uint32(0xFFFFFFFF), jnp.uint32)])
+    scan = segmented_min_scan(seg, val, block=block, interpret=interpret)
+    nxt = jnp.concatenate([seg[1:], jnp.full(1, -3, jnp.int32)])
+    run_end = seg != nxt
+    out = jnp.full((num_segments,), np.uint32(0xFFFFFFFF), jnp.uint32)
+    idx = jnp.where(run_end, seg, num_segments)
+    return out.at[idx].set(jnp.where(run_end, scan, np.uint32(0xFFFFFFFF)), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "use_pallas",
+                                             "interpret"))
+def segment_min(
+    val: jnp.ndarray, seg: jnp.ndarray, *, num_segments: int,
+    use_pallas: bool = False, interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-segment min; unsorted input. Pallas path sorts then scans."""
+    if not use_pallas:
+        return ref.segment_min(val, seg, num_segments)
+    order = jnp.argsort(seg)
+    return segment_min_sorted(
+        val[order], seg[order], num_segments=num_segments,
+        interpret=interpret)

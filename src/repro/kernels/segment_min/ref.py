@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the segment_min kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+INF_U32 = np.uint32(0xFFFFFFFF)
+
+
+def segment_min(val: jnp.ndarray, seg: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    """Per-segment min via XLA scatter-min (segments need not be sorted)."""
+    out = jnp.full((num_segments,), INF_U32, jnp.uint32)
+    return out.at[seg].min(val, mode="drop")
+
+
+def segmented_min_scan(seg: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive segmented min-scan oracle (sorted segments), O(M²) lax-free."""
+    import jax
+
+    def step(carry, x):
+        cs, cv = carry
+        s, v = x
+        cv = jnp.where(s == cs, jnp.minimum(cv, v), v)
+        return (s, cv), cv
+
+    (_, _), out = jax.lax.scan(step, (jnp.int32(-2), INF_U32), (seg, val))
+    return out

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: segmented min over sorted (segment, value) pairs.
+
+The MST hot-spot (paper Report phase / our Borůvka MOE election): given
+edges sorted by fragment id, compute the per-fragment minimum packed key.
+
+TPU adaptation (DESIGN.md §2): no atomics on TPU, so instead of scatter-min
+we run a *segmented inclusive min-scan* — Hillis–Steele log-steps inside each
+VMEM block, with a (segment, running-min) carry threaded across the
+sequential TPU grid in SMEM/VMEM scratch.  The run-ends of the scanned array
+then hold each segment's min, and a conflict-free scatter (each output
+written once) finalizes — that scatter lives in ops.py as plain XLA.
+
+Block size is a multiple of 128 (VPU lane width); values are uint32 (weight
+bits or tiebreak lane — two passes elect the (w, e) pair, see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF_U32 = 0xFFFFFFFF           # python int: safe to close over
+SENTINEL_SEG = -2              # carry init; never a real segment id
+
+
+def _scan_kernel(seg_ref, val_ref, out_ref, carry_seg, carry_val, *, block):
+    i = pl.program_id(0)
+    inf = jnp.uint32(INF_U32)
+    sentinel = jnp.int32(SENTINEL_SEG)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_seg[0] = sentinel
+        carry_val[0] = inf
+
+    seg = seg_ref[...]
+    val = val_ref[...]
+    idx = jax.lax.iota(jnp.int32, block)
+    # Segmented Hillis–Steele min-scan within the block.
+    shift = 1
+    while shift < block:
+        sval = jnp.where(idx >= shift, jnp.roll(val, shift), inf)
+        sseg = jnp.where(idx >= shift, jnp.roll(seg, shift), sentinel)
+        val = jnp.where(sseg == seg, jnp.minimum(val, sval), val)
+        shift *= 2
+    # Fold the carry into this block's first run.
+    val = jnp.where(seg == carry_seg[0], jnp.minimum(val, carry_val[0]), val)
+    out_ref[...] = val
+    carry_seg[0] = seg[block - 1]
+    carry_val[0] = val[block - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segmented_min_scan(
+    seg: jnp.ndarray, val: jnp.ndarray, *, block: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Inclusive segmented min-scan of ``val`` along sorted ``seg`` runs."""
+    assert seg.shape == val.shape and seg.ndim == 1
+    m = seg.shape[0]
+    assert m % block == 0, "caller pads to a block multiple"
+    grid = (m // block,)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.uint32),
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.SMEM((1,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(seg, val)

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import: jax locks the device
+# count on first initialization. Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, record memory/cost analysis + collective bytes for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out benchmarks/artifacts/dryrun
+
+Proves (per the deliverable): the sharding config is coherent (no sharding
+mismatches / unsupported collectives), per-device memory fits, and yields
+the HLO-derived roofline terms of EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.models.api import get_model, train_input_specs
+from repro.models.config import ModelConfig
+from repro.sharding.specs import (ShardingRules, param_shardings, shard,
+                                  tree_paths, use_sharding, _axis_size)
+from repro.launch.flops import cost_of
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import TrainHParams, init_train_state, \
+    make_train_step
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(\S+?)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in post-SPMD HLO (per device)."""
+    per_op: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(dtype, dims)
+        slot = per_op.setdefault(op, {"count": 0, "bytes": 0})
+        slot["count"] += 1
+        slot["bytes"] += b
+    total = sum(v["bytes"] for v in per_op.values())
+    return {"per_op": per_op, "total_bytes": total}
+
+
+def batch_axes_or_none(mesh, rules, dim: int):
+    ax = rules.batch
+    return ax if dim % _axis_size(mesh, ax) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Input shardings
+# ---------------------------------------------------------------------------
+
+def train_batch_shardings(specs, mesh, rules):
+    out = {}
+    for k, v in specs.items():
+        ba = batch_axes_or_none(mesh, rules, v.shape[0])
+        out[k] = NamedSharding(mesh, P(*([ba] + [None] * (len(v.shape) - 1))))
+    return out
+
+
+def decode_state_shardings(cfg: ModelConfig, state_shapes, mesh, rules,
+                           batch: int, cache_len: int):
+    """Explicit per-family decode-state shardings (KV seq over the TP axis)."""
+    ba = batch_axes_or_none(mesh, rules, batch)
+    model = rules.model
+
+    def kv_spec(shape):
+        # (L, B, Hkv, S, hd) — shard S over model (always divisible: 2^k)
+        seq_ok = shape[3] % _axis_size(mesh, model) == 0 if model else False
+        return P(None, ba, None, model if seq_ok else None, None)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        cache = state_shapes
+        return type(cache)(k=ns(kv_spec(cache.k.shape)),
+                           v=ns(kv_spec(cache.v.shape)),
+                           index=ns(P()))
+    if fam == "encdec":
+        cache, cross = state_shapes
+        c = type(cache)(k=ns(kv_spec(cache.k.shape)),
+                        v=ns(kv_spec(cache.v.shape)), index=ns(P()))
+        return (c, (ns(kv_spec(cross[0].shape)), ns(kv_spec(cross[1].shape))))
+    if fam == "ssm":
+        d_ok = cfg.d_model % _axis_size(mesh, model) == 0 if model else False
+        dm = model if d_ok else None
+        return dict(
+            tm=ns(P(None, ba, dm)), cm=ns(P(None, ba, dm)),
+            wkv=ns(P(None, ba, None, None, None)))
+    if fam == "hybrid":
+        di_ok = cfg.d_inner % _axis_size(mesh, model) == 0 if model else False
+        dm = model if di_ok else None
+        return dict(
+            conv=ns(P(None, None, ba, None, dm)),
+            ssm=ns(P(None, None, ba, dm, None)),
+            k=ns(kv_spec(state_shapes["k"].shape)),
+            v=ns(kv_spec(state_shapes["v"].shape)),
+            index=ns(P()))
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (lowered, meta)
+# ---------------------------------------------------------------------------
+
+def lower_train(cfg, shape, mesh, rules):
+    # Microbatch accumulation: cap per-device tokens per microbatch at 16k
+    # (65k tokens/device at full batch blows the activation budget of every
+    # >10B arch; grads accumulate in the sharded fp32 buffer).
+    n_dev_batch = _axis_size(mesh, rules.batch)
+    tokens_per_dev = shape.global_batch * shape.seq_len // max(n_dev_batch, 1)
+    accum = max(1, tokens_per_dev // 16384)
+    if cfg.param_count() > 4e10:
+        accum = max(accum, 8)
+    if cfg.family == "ssm":       # recurrent scan residuals are f32-heavy
+        accum = max(accum, 8)
+    hp = TrainHParams(remat="full", grad_accum=accum)
+    step = make_train_step(cfg, hp)
+    rng = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(lambda r: init_train_state(r, cfg), rng)
+    psh = param_shardings(state_shapes["params"], mesh, rules)
+    state_sh = dict(params=psh,
+                    opt=dict(m=psh, v=psh,
+                             step=NamedSharding(mesh, P())))
+    specs = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+    bsh = train_batch_shardings(specs, mesh, rules)
+    with use_sharding(mesh, rules):
+        lowered = jax.jit(
+            step, in_shardings=(state_sh, bsh), donate_argnums=(0,),
+        ).lower(state_shapes, specs)
+        jc = cost_of(step, state_shapes, specs)
+    tokens = shape.global_batch * shape.seq_len
+    # 6·N_active·D counts fwd+bwd (2N fwd + 4N bwd per token), per the spec.
+    model_flops = 6 * cfg.active_param_count() * tokens
+    return lowered, dict(model_flops=model_flops, tokens=tokens,
+                         jaxpr_flops_global=jc["flops"],
+                         jaxpr_bytes_global=jc["bytes"],
+                         jaxpr_unbounded_whiles=jc["while_bodies"])
+
+
+def lower_prefill(cfg, shape, mesh, rules):
+    pf = make_prefill_step(cfg, max_len=shape.seq_len)
+    rng = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(
+        lambda r: get_model(cfg).init(r, cfg), rng)
+    psh = param_shardings(params_shapes, mesh, rules)
+    specs = train_input_specs(cfg, shape.global_batch, shape.seq_len)
+    specs.pop("labels")
+    bsh = train_batch_shardings(specs, mesh, rules)
+    # Explicit out_shardings: the produced KV caches must come out sharded
+    # (B over data, cache-seq over model) or they'd be materialized
+    # replicated — the dominant buffer at 32k.
+    ba = batch_axes_or_none(mesh, rules, shape.global_batch)
+    vdiv = cfg.vocab % _axis_size(mesh, rules.model) == 0
+    logits_sh = NamedSharding(mesh,
+                              P(ba, None, rules.model if vdiv else None))
+    # NOTE: eval_shape must run INSIDE the sharding ctx — jax's trace cache
+    # is shared with jit, and an un-ctx'd trace would pin the non-EP MoE
+    # path into the compiled artifact (measured: 112 GiB ragged buffers).
+    with use_sharding(mesh, rules):
+        out_shapes = jax.eval_shape(pf, params_shapes, specs)
+    cache_len = shape.seq_len + (cfg.n_frontend_tokens
+                                 if cfg.family == "vlm" else 0)
+    if cfg.family == "encdec":
+        state_sh = decode_state_shardings(
+            cfg, (out_shapes[1], out_shapes[2]), mesh, rules,
+            shape.global_batch, shape.seq_len)
+        osh = (logits_sh, state_sh[0], state_sh[1])
+    else:
+        osh = (logits_sh, decode_state_shardings(
+            cfg, out_shapes[1], mesh, rules, shape.global_batch,
+            cache_len))
+    with use_sharding(mesh, rules):
+        lowered = jax.jit(pf, in_shardings=(psh, bsh),
+                          out_shardings=osh).lower(params_shapes, specs)
+        jc = cost_of(pf, params_shapes, specs)
+    tokens = shape.global_batch * shape.seq_len
+    return lowered, dict(model_flops=2 * cfg.active_param_count() * tokens,
+                         tokens=tokens,
+                         jaxpr_flops_global=jc["flops"],
+                         jaxpr_bytes_global=jc["bytes"],
+                         jaxpr_unbounded_whiles=jc["while_bodies"])
+
+
+def lower_decode(cfg, shape, mesh, rules):
+    from repro.train.serve_step import decode_input_specs
+    dstep = make_decode_step(cfg)
+    rng = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(
+        lambda r: get_model(cfg).init(r, cfg), rng)
+    psh = param_shardings(params_shapes, mesh, rules)
+    state_shapes, tok_spec = decode_input_specs(
+        cfg, shape.global_batch, shape.seq_len)
+    ssh = decode_state_shardings(cfg, state_shapes, mesh, rules,
+                                 shape.global_batch, shape.seq_len)
+    ba = batch_axes_or_none(mesh, rules, shape.global_batch)
+    tsh = NamedSharding(mesh, P(ba, None))
+
+    def fn(params, state, tokens):
+        nxt, new_state, _ = dstep(params, state, tokens)
+        return nxt, new_state
+
+    with use_sharding(mesh, rules):
+        lowered = jax.jit(fn, in_shardings=(psh, ssh, tsh),
+                          donate_argnums=(1,)).lower(
+            params_shapes, state_shapes, tok_spec)
+        jc = cost_of(fn, params_shapes, state_shapes, tok_spec)
+    tokens = shape.global_batch  # one token per sequence per step
+    return lowered, dict(model_flops=2 * cfg.active_param_count() * tokens,
+                         tokens=tokens,
+                         jaxpr_flops_global=jc["flops"],
+                         jaxpr_bytes_global=jc["bytes"],
+                         jaxpr_unbounded_whiles=jc["while_bodies"])
+
+
+BUILDERS = {"train": lower_train, "prefill": lower_prefill,
+            "decode": lower_decode}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh, rules, mesh_tag: str,
+             out_dir: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_tag,
+               status="skip", reason=why)
+    if not ok:
+        return rec
+    t0 = time.time()
+    try:
+        lowered, meta = BUILDERS[shape.kind](cfg, shape, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        coll = collective_bytes(compiled.as_text())
+        n_dev = int(np.prod(mesh.devices.shape))
+        rec.update(
+            status="ok", reason="",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_devices=n_dev,
+            flops_per_device=float(cost.get("flops", -1.0)),
+            bytes_per_device=float(cost.get("bytes accessed", -1.0)),
+            collectives=coll,
+            memory=dict(
+                argument_bytes=int(mem.argument_size_in_bytes),
+                output_bytes=int(mem.output_size_in_bytes),
+                temp_bytes=int(mem.temp_size_in_bytes),
+                peak_bytes=int(mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes),
+            ),
+            **meta,
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update(status="fail", reason=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multipod2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    failures = 0
+    for mesh_tag, mesh in meshes:
+        rules = make_rules(mesh)
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh, rules, mesh_tag,
+                               args.out)
+                line = (f"[{mesh_tag}] {arch:24s} {shape_name:12s} "
+                        f"{rec['status']:5s}")
+                if rec["status"] == "ok":
+                    nd = rec["n_devices"]
+                    line += (f" compile={rec['compile_s']:6.1f}s "
+                             f"jflops/dev={rec['jaxpr_flops_global']/nd:.3e} "
+                             f"coll={rec['collectives']['total_bytes']/2**20:8.1f}MiB "
+                             f"peak={rec['memory']['peak_bytes']/2**30:6.2f}GiB")
+                elif rec["status"] == "fail":
+                    failures += 1
+                    line += f"  {rec['reason'][:120]}"
+                else:
+                    line += f"  ({rec['reason'][:60]})"
+                print(line, flush=True)
+    print(f"dryrun complete; failures={failures}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Uniform model API: family → (init, loss_fn, prefill, decode_step).
+
+Also provides ``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run)
+and ``synth_batch`` (concrete random batches for smoke tests / examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, jamba, rwkv6, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_decode_state: Callable     # (cfg, batch, max_len) -> state pytree
+
+
+def _transformer_state(cfg, batch, max_len):
+    from repro.models.layers import make_cache
+    return make_cache(cfg, batch, max_len)
+
+
+def _rwkv_state(cfg, batch, max_len):
+    return rwkv6.init_state(cfg, batch)
+
+
+def _jamba_state(cfg, batch, max_len):
+    return jamba.init_state(cfg, batch, max_len)
+
+
+def _encdec_state(cfg, batch, max_len):
+    from repro.models.layers import KVCache
+    dt = jnp.dtype(cfg.compute_dtype)
+    nl = cfg.n_layers
+    cache = KVCache(
+        k=jnp.zeros((nl, batch, cfg.n_kv_heads, max_len, cfg.hd), dt),
+        v=jnp.zeros((nl, batch, cfg.n_kv_heads, max_len, cfg.hd), dt),
+        index=jnp.zeros((), jnp.int32))
+    # cross K/V over the encoder output (enc length == max_len here)
+    cross = (jnp.zeros((nl, batch, cfg.n_kv_heads, max_len, cfg.hd), dt),
+             jnp.zeros((nl, batch, cfg.n_kv_heads, max_len, cfg.hd), dt))
+    return cache, cross
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelApi(transformer.init, transformer.loss_fn,
+                        transformer.prefill, transformer.decode_step,
+                        _transformer_state)
+    if fam == "encdec":
+        return ModelApi(encdec.init, encdec.loss_fn, encdec.prefill,
+                        encdec.decode_step, _encdec_state)
+    if fam == "ssm":
+        return ModelApi(rwkv6.init, rwkv6.loss_fn, rwkv6.prefill,
+                        rwkv6.decode_step, _rwkv_state)
+    if fam == "hybrid":
+        return ModelApi(jamba.init, jamba.loss_fn, jamba.prefill,
+                        jamba.decode_step, _jamba_state)
+    raise ValueError(fam)
+
+
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs for one training batch (no allocation)."""
+    specs = dict(
+        tokens=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        labels=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    )
+    if cfg.family == "encdec":
+        specs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_frontend), jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_frontend),
+            jnp.dtype(cfg.compute_dtype))
+    return specs
+
+
+def synth_batch(rng_seed: int, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Concrete random batch matching ``train_input_specs``."""
+    rng = np.random.default_rng(rng_seed)
+    out: dict[str, Any] = dict(
+        tokens=jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)),
+                           jnp.int32),
+    )
+    out["labels"] = jnp.asarray(
+        np.roll(np.asarray(out["tokens"]), -1, axis=1), jnp.int32)
+    if cfg.family == "encdec":
+        out["frame_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_frontend)) * 0.1,
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_frontend_tokens,
+                                 cfg.d_frontend)) * 0.1,
+            jnp.dtype(cfg.compute_dtype))
+    return out

@@ -1,0 +1,299 @@
+"""Shared neural layers: norms, RoPE, GQA attention, SwiGLU — params are
+plain dict pytrees (init fns + apply fns), sharding via logical tags."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import ops as decode_ops
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models.config import ModelConfig
+from repro.sharding.specs import shard
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def dense_init(rng, in_dim: int, out_dim: int, *, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32)
+            * scale).astype(jnp.float32)
+
+
+def rmsnorm(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    nrm = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * nrm * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S,half)
+        ang = ang[None, None]
+    else:
+        ang = positions.astype(jnp.float32)[:, None, :, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCache:
+    k: jnp.ndarray       # (B, Hkv, Smax, hd)
+    v: jnp.ndarray
+    index: jnp.ndarray   # scalar i32 — filled length (uniform across batch)
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "index"], meta_fields=[])
+
+
+def attn_init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    p = dict(
+        wq=dense_init(ks[0], cfg.d_model, cfg.q_dim),
+        wk=dense_init(ks[1], cfg.d_model, cfg.kv_dim),
+        wv=dense_init(ks[2], cfg.d_model, cfg.kv_dim),
+        wo=dense_init(ks[3], cfg.q_dim, cfg.d_model),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((cfg.hd,), jnp.float32)
+        p["kn"] = jnp.ones((cfg.hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, x_kv=None):
+    dt = x.dtype
+    x_kv = x if x_kv is None else x_kv
+    b, s, _ = x.shape
+    skv = x_kv.shape[1]
+    q = x @ p["wq"].astype(dt)
+    k = x_kv @ p["wk"].astype(dt)
+    v = x_kv @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, skv, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, skv, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_apply(
+    p, x, cfg: ModelConfig, *, positions, causal: bool = True,
+    use_rope: bool = True, x_kv=None, cache: Optional[KVCache] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, x_kv=x_kv)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if x_kv is None else
+                 jnp.arange(k.shape[2]), cfg.rope_theta)
+    q = shard(q, "batch", "heads", None, None)
+    k = shard(k, "batch", "heads", None, None)
+    v = shard(v, "batch", "heads", None, None)
+    o = attn_ops.attention(q, k, v, causal=causal)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    out = o @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(
+    p, x, cfg: ModelConfig, cache: KVCache, *, use_rope: bool = True,
+    cross_kv=None,
+):
+    """One-token decode step. x: (B, 1, D)."""
+    b = x.shape[0]
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = (x @ p["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype)
+        q = q.reshape(b, cfg.n_heads, cfg.hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        length = jnp.full((b,), k.shape[2], jnp.int32)
+        o = decode_ops.decode_attention(q, k, v, length)
+        return o.reshape(b, 1, cfg.q_dim) @ p["wo"].astype(x.dtype), cache
+    q, k1, v1 = _project_qkv(p, x, cfg)
+    pos = cache.index[None] if cache.index.ndim == 0 else cache.index
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k1 = rope(k1, pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k1.astype(cache.k.dtype), (0, 0, cache.index, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v1.astype(cache.v.dtype), (0, 0, cache.index, 0))
+    length = jnp.full((b,), cache.index + 1, jnp.int32)
+    o = decode_ops.decode_attention(q[:, :, 0], k, v, length)
+    out = o.reshape(b, 1, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return out, KVCache(k=k, v=v, index=cache.index + 1)
+
+
+def attn_decode_stacked(p, x, cfg: ModelConfig, ks, vs, layer, index, *,
+                        use_rope: bool = True):
+    """One-token decode against a STACKED (L,B,Hkv,S,hd) cache, updated
+    in place at (layer, index).  Used inside scan with the cache as CARRY so
+    XLA aliases the buffers — one cache copy lives, not two (the xs→ys
+    pattern double-buffers the whole cache)."""
+    b = x.shape[0]
+    q, k1, v1 = _project_qkv(p, x, cfg)
+    pos = jnp.asarray(index)[None]
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k1 = rope(k1, pos, cfg.rope_theta)
+    ks = jax.lax.dynamic_update_slice(
+        ks, k1[None].astype(ks.dtype), (layer, 0, 0, index, 0))
+    vs = jax.lax.dynamic_update_slice(
+        vs, v1[None].astype(vs.dtype), (layer, 0, 0, index, 0))
+    k = jax.lax.dynamic_index_in_dim(ks, layer, 0, keepdims=False)
+    v = jax.lax.dynamic_index_in_dim(vs, layer, 0, keepdims=False)
+    length = jnp.full((b,), index + 1, jnp.int32)
+    o = decode_ops.decode_attention(q[:, :, 0], k, v, length)
+    out = o.reshape(b, 1, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return out, ks, vs
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               n_layers: Optional[int] = None, stacked: bool = True):
+    """Zero-filled stacked KV cache: leaves have leading layer axis."""
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    dt = cdtype(cfg)
+    shape = (nl, batch, cfg.n_kv_heads, max_len, cfg.hd) if stacked else \
+            (batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+        index=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d_model: int, d_ff: int) -> dict:
+    ks = jax.random.split(rng, 3)
+    return dict(
+        wi=dense_init(ks[0], d_model, d_ff),
+        wg=dense_init(ks[1], d_model, d_ff),
+        wd=dense_init(ks[2], d_ff, d_model),
+    )
+
+
+def swiglu_apply(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    h = shard(h, "batch", None, "ff")
+    return h @ p["wd"].astype(dt)
+
+
+def embed_init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 2)
+    p = dict(embed=(jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                      jnp.float32) * 0.02))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab)
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    x = p["embed"].astype(cdtype(cfg))[tokens]
+    return shard(x, "batch", "seq", None)
+
+
+def lm_logits(p, x, cfg: ModelConfig):
+    w = (p["embed"].T if cfg.tie_embeddings else p["lm_head"])
+    logits = x @ w.astype(x.dtype)
+    return shard(logits, "batch", None, "vocab")
+
+
+def chunked_lm_loss(params, x, labels, cfg, *, chunk: int = 512):
+    """CE over sequence chunks: the (B, chunk, V) logits are transient and
+    recomputed in backward (checkpointed) — peak memory never holds the full
+    (B, S, V) logits.  This is the production head for 150k-vocab models."""
+    b, s, d = x.shape
+    if s % chunk != 0 or s <= chunk:
+        logits = lm_logits(params, x, cfg)
+        return cross_entropy(logits, labels)
+    nc = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        xi, li = xs
+        logits = lm_logits(params, xi, cfg)
+        nll, cnt = _ce_sums(logits, li)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def _ce_sums(logits, labels, mask=None):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    nll = lse - ll
+    valid = (labels >= 0) if mask is None else (mask & (labels >= 0))
+    valid_f = valid.astype(jnp.float32)
+    return (nll * valid_f).sum(), valid_f.sum()
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE in f32; labels -100 (or mask=0) are ignored.
+
+    The label log-prob is a masked reduction over the vocab axis (not
+    take_along_axis): with vocab sharded over the TP axis this lowers to a
+    local partial sum + a tiny (B,S) all-reduce instead of an all-gather of
+    the full logits."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    onehot = (iota == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - ll
+    valid = (labels >= 0) if mask is None else (mask & (labels >= 0))
+    valid_f = valid.astype(jnp.float32)
+    return (nll * valid_f).sum() / jnp.maximum(valid_f.sum(), 1.0)

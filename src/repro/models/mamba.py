@@ -1,0 +1,118 @@
+"""Mamba-1 (S6) mixer layer for the Jamba hybrid (arXiv:2403.19887).
+
+in_proj → depthwise causal conv1d → selective scan (via
+:mod:`repro.kernels.mamba_scan`) → gated output.  Decode carries a
+(conv window, SSM state) pair per layer — O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mamba_scan import ops as scan_ops
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding.specs import shard
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def mamba_init(rng, cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    r = dt_rank(cfg)
+    ks = jax.random.split(rng, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return dict(
+        in_proj=layers.dense_init(ks[0], d, 2 * di),
+        conv_w=(jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                * (1.0 / np.sqrt(cfg.d_conv))),
+        conv_b=jnp.zeros((di,), jnp.float32),
+        x_proj=layers.dense_init(ks[2], di, r + 2 * n),
+        dt_proj=layers.dense_init(ks[3], r, di, scale=r ** -0.5),
+        dt_bias=jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,)) * 0.1, 1e-3, 0.1))),
+        a_log=jnp.log(a),
+        d_skip=jnp.ones((di,), jnp.float32),
+        out_proj=layers.dense_init(ks[5], di, d),
+    )
+
+
+def _conv1d(x, w, b):
+    """Depthwise causal conv. x: (B,T,di); w: (K,di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """x: (B,T,D). Returns y [, (conv_state, ssm_state)]."""
+    di, n = cfg.d_inner, cfg.d_state
+    r = dt_rank(cfg)
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    # Channel-parallel: the recurrence is elementwise over d_inner, so shard
+    # channels over the TP axis (seq must be local for the time scan).
+    xz = shard(xz, "batch", None, "ff")
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = jax.nn.silu(_conv1d(x1, p["conv_w"], p["conv_b"]))
+    x1 = shard(x1, "batch", None, "ff")
+    dbc = x1 @ p["x_proj"].astype(dt_)
+    dtr, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt_t = jax.nn.softplus(
+        dtr.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"])
+    dt_t = shard(dt_t, "batch", None, "ff")
+    a = -jnp.exp(p["a_log"])
+    res = scan_ops.selective_scan(
+        x1.astype(jnp.float32), dt_t, bmat.astype(jnp.float32),
+        cmat.astype(jnp.float32), a, p["d_skip"],
+        return_state=return_state)
+    if return_state:
+        y, h = res
+    else:
+        y = res
+    y = (y.astype(dt_) * jax.nn.silu(z)) @ p["out_proj"].astype(dt_)
+    if return_state:
+        k = cfg.d_conv
+        xz_tail = (x @ p["in_proj"].astype(dt_))[:, -(k - 1):, :di]
+        conv_state = xz_tail  # last K-1 pre-conv inputs
+        return y, (conv_state, h)
+    return y
+
+
+def mamba_step(p, x, cfg: ModelConfig, state):
+    """x: (B,1,D); state = (conv_state (B,K-1,di), ssm_state (B,di,N))."""
+    conv_state, h = state
+    di, n = cfg.d_inner, cfg.d_state
+    r = dt_rank(cfg)
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    x1, z = jnp.split(xz[:, 0], 2, axis=-1)        # (B, di)
+    window = jnp.concatenate([conv_state, x1[:, None]], axis=1)  # (B,K,di)
+    xc = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                    p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc).astype(dt_)
+    dbc = xc @ p["x_proj"].astype(dt_)
+    dtr, bvec, cvec = jnp.split(dbc, [r, r + n], axis=-1)
+    dt_t = jax.nn.softplus(
+        dtr.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    h, y = scan_ops.selective_scan_step(
+        h, xc.astype(jnp.float32), dt_t, bvec.astype(jnp.float32),
+        cvec.astype(jnp.float32), a, p["d_skip"])
+    y = (y.astype(dt_) * jax.nn.silu(z)) @ p["out_proj"].astype(dt_)
+    new_conv = window[:, 1:]
+    return y[:, None], (new_conv, h)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    dt_ = layers.cdtype(cfg)
+    return (jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dt_),
+            jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32))

@@ -1,0 +1,215 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+Blocks: time-mix (token-shift lerps → r/k/v/g projections, LoRA-modulated
+per-channel decay w_t, WKV6 recurrence, per-head group-norm) + channel-mix
+(token-shift, squared-ReLU).  The WKV core routes through
+:mod:`repro.kernels.rwkv6` (Pallas TPU kernel or jnp scan).
+
+Simplification vs. the HF release (documented in DESIGN.md): the r/k/v/g
+token-shift mixes are static learned lerps (RWKV6's extra data-dependent
+ddlerp LoRA is applied to the decay w only, which is where the paper's
+"data-dependent decay" contribution lives).
+
+State per layer for decode: (tm_shift (B,D), cm_shift (B,D),
+wkv state (B,H,hd,hd)) — O(1) in sequence length, hence ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ops as wkv_ops
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding.specs import shard
+
+LORA_DIM = 64
+
+
+def _layer_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 12)
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return dict(
+        ln1=jnp.ones((d,), jnp.float32),
+        ln2=jnp.ones((d,), jnp.float32),
+        # time-mix
+        mu_r=jnp.full((d,), 0.5, jnp.float32),
+        mu_k=jnp.full((d,), 0.5, jnp.float32),
+        mu_v=jnp.full((d,), 0.5, jnp.float32),
+        mu_g=jnp.full((d,), 0.5, jnp.float32),
+        mu_w=jnp.full((d,), 0.5, jnp.float32),
+        r_proj=layers.dense_init(ks[0], d, d),
+        k_proj=layers.dense_init(ks[1], d, d),
+        v_proj=layers.dense_init(ks[2], d, d),
+        g_proj=layers.dense_init(ks[3], d, d),
+        out_proj=layers.dense_init(ks[4], d, d),
+        w0=jnp.full((d,), -6.0, jnp.float32),          # decay bias
+        w_lora_a=layers.dense_init(ks[5], d, LORA_DIM),
+        w_lora_b=(jax.random.normal(ks[6], (LORA_DIM, d), jnp.float32)
+                  * 0.01),
+        u=(jax.random.normal(ks[7], (nh, hd), jnp.float32) * 0.1),
+        gn=jnp.ones((d,), jnp.float32),
+        gn_b=jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        cmu_r=jnp.full((d,), 0.5, jnp.float32),
+        cmu_k=jnp.full((d,), 0.5, jnp.float32),
+        ck_proj=layers.dense_init(ks[8], d, cfg.d_ff),
+        cv_proj=layers.dense_init(ks[9], cfg.d_ff, d),
+        cr_proj=layers.dense_init(ks[10], d, d),
+    )
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, cfg.n_layers + 1)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg))(
+        jnp.stack(ks[:-1]))
+    return dict(layers=stacked,
+                final_norm=jnp.ones((cfg.d_model,), jnp.float32),
+                **layers.embed_init(ks[-1], cfg))
+
+
+def _shift(x, prev):
+    """Token shift: returns per-position previous token ([prev, x[:-1]])."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _decay(lp, xw, dt):
+    w = lp["w0"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ lp["w_lora_a"]) @ lp["w_lora_b"]
+    return jnp.exp(-jnp.exp(w)).astype(dt)        # in (0, 1)
+
+
+def _time_mix(lp, x, cfg: ModelConfig, prev_tok, wkv_state, *,
+              use_pallas=False):
+    """x: (B,T,D). Returns (out, new_prev_tok, new_wkv_state)."""
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    dt = x.dtype
+    xs = _shift(x, prev_tok)
+    mix = lambda mu: x + (xs - x) * mu.astype(dt)
+    r = mix(lp["mu_r"]) @ lp["r_proj"].astype(dt)
+    k = mix(lp["mu_k"]) @ lp["k_proj"].astype(dt)
+    v = mix(lp["mu_v"]) @ lp["v_proj"].astype(dt)
+    g = jax.nn.silu(mix(lp["mu_g"]) @ lp["g_proj"].astype(dt))
+    w = _decay(lp, mix(lp["mu_w"]), dt)                   # (B,T,D)
+
+    def heads(z):
+        return (z.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+                .reshape(b * nh, t, hd))
+
+    u = jnp.broadcast_to(lp["u"].astype(dt), (b, nh, hd)).reshape(b * nh, hd)
+    # (B·H) rides data×model jointly: the WKV scan is independent per head,
+    # so TP parallelism maps onto the flattened batch-heads dim.
+    bh_shard = lambda z: shard(z, "batch_heads", None, None)
+    if t == 1 and wkv_state is not None:
+        s = wkv_state.reshape(b * nh, hd, hd)
+        s, o = wkv_ops.wkv6_step(s, heads(r)[:, 0], heads(k)[:, 0],
+                                 heads(v)[:, 0], heads(w)[:, 0], u)
+        o = o[:, None].astype(dt)          # keep the residual-stream dtype
+        new_state = s.astype(jnp.float32).reshape(b, nh, hd, hd)
+    elif wkv_state is not None:  # prefill: thread the final state out
+        o, s = wkv_ops.wkv6(bh_shard(heads(r)), bh_shard(heads(k)),
+                            bh_shard(heads(v)), bh_shard(heads(w)), u,
+                            return_state=True)
+        new_state = s.reshape(b, nh, hd, hd)
+    else:
+        o = wkv_ops.wkv6(bh_shard(heads(r)), bh_shard(heads(k)),
+                         bh_shard(heads(v)), bh_shard(heads(w)), u,
+                         use_pallas=use_pallas)
+        new_state = None   # training path does not thread state
+    o = o.reshape(b, nh, t, hd).transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = layers.layernorm(o, lp["gn"], lp["gn_b"], cfg.norm_eps)
+    out = (o * g) @ lp["out_proj"].astype(dt)
+    return out, x[:, -1], new_state
+
+
+def _channel_mix(lp, x, prev_tok, dt):
+    xs = _shift(x, prev_tok)
+    xr = x + (xs - x) * lp["cmu_r"].astype(dt)
+    xk = x + (xs - x) * lp["cmu_k"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ lp["ck_proj"].astype(dt)))
+    kk = shard(kk, "batch", None, "ff")
+    out = jax.nn.sigmoid(xr @ lp["cr_proj"].astype(dt)) * (
+        kk @ lp["cv_proj"].astype(dt))
+    return out, x[:, -1]
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat: str = "none",
+            return_state: bool = False):
+    """Training (return_state=False) / prefill (True) forward."""
+    x = layers.embed_tokens(params, tokens, cfg)
+    b, t, d = x.shape
+    zeros_tok = jnp.zeros((b, d), x.dtype)
+    nh = d // cfg.rwkv_head_dim
+
+    def body(carry, lp):
+        x, = carry
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        wkv0 = (jnp.zeros((b, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                          jnp.float32) if return_state else None)
+        o, tm, wkv = _time_mix(lp, h, cfg, zeros_tok, wkv0)
+        x = x + o
+        h = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        o, cm = _channel_mix(lp, h, zeros_tok, x.dtype)
+        x = shard(x + o, "batch", "seq", None)   # SP boundary
+        ys = (tm, cm, wkv) if return_state else None
+        return (x,), ys
+
+    if remat != "none":
+        from repro.models.transformer import REMAT_POLICIES
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat],
+                              prevent_cse=False)
+    (x,), ys = jax.lax.scan(body, (x,), params["layers"])
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_state:
+        tm, cm, wkv = ys
+        return x, dict(tm=tm, cm=cm, wkv=wkv)
+    return x
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: str = "none"):
+    x = forward(params, batch["tokens"], cfg, remat=remat)
+    return layers.chunked_lm_loss(params, x, batch["labels"], cfg)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    dt = layers.cdtype(cfg)
+    return dict(
+        tm=jnp.zeros((cfg.n_layers, batch, d), dt),
+        cm=jnp.zeros((cfg.n_layers, batch, d), dt),
+        wkv=jnp.zeros((cfg.n_layers, batch, nh, hd, hd), jnp.float32),
+    )
+
+
+def prefill(params, tokens, cfg: ModelConfig, **_):
+    """Run the prompt once, threading per-layer (shift, wkv) states out."""
+    x, state = forward(params, tokens, cfg, return_state=True)
+    logits = layers.lm_logits(params, x[:, -1:], cfg)
+    return logits, state
+
+
+def decode_step(params, state, tokens, cfg: ModelConfig):
+    """tokens (B,1); state from init_state/prefill."""
+    x = layers.embed_tokens(params, tokens, cfg)
+
+    def body(x, xs):
+        lp, tm, cm, wkv = xs
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        o, tm2, wkv2 = _time_mix(lp, h, cfg, tm, wkv)
+        x = x + o
+        h = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        o, cm2 = _channel_mix(lp, h, cm, x.dtype)
+        x = x + o
+        return x, (tm2, cm2, wkv2)
+
+    x, (tm, cm, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state["tm"], state["cm"], state["wkv"]))
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.lm_logits(params, x, cfg)
+    return logits, dict(tm=tm, cm=cm, wkv=wkv)

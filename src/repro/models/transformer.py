@@ -1,0 +1,168 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-prefix families).
+
+Layer stacks are ``lax.scan`` over stacked parameters (compact HLO at 64
+layers — essential for 512-device dry-run compiles), with configurable
+rematerialization of the layer body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe
+from repro.models.config import ModelConfig
+from repro.models.layers import KVCache
+from repro.sharding.specs import shard
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _is_moe(cfg: ModelConfig, _layer: int = 0) -> bool:
+    return cfg.n_experts > 0
+
+
+def layer_init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = dict(
+        ln1=jnp.ones((cfg.d_model,), jnp.float32),
+        ln2=jnp.ones((cfg.d_model,), jnp.float32),
+        attn=layers.attn_init(ks[0], cfg),
+    )
+    if _is_moe(cfg):
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = layers.swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    stacked = jax.vmap(lambda k: layer_init(k, cfg))(
+        jnp.stack(ks[:cfg.n_layers]))
+    p = dict(
+        layers=stacked,
+        final_norm=jnp.ones((cfg.d_model,), jnp.float32),
+        **layers.embed_init(ks[-1], cfg),
+    )
+    if cfg.d_frontend:
+        p["patch_proj"] = layers.dense_init(
+            ks[-2], cfg.d_frontend, cfg.d_model)
+    return p
+
+
+def _layer_apply(lp, x, cfg: ModelConfig, positions):
+    h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    x = x + layers.attn_apply(lp["attn"], h, cfg, positions=positions)
+    h = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if _is_moe(cfg):
+        y, aux = moe.moe_apply(lp["moe"], h, cfg)
+    else:
+        y, aux = layers.swiglu_apply(lp["mlp"], h), jnp.float32(0.0)
+    x = shard(x + y, "batch", "seq", None)   # Megatron-style SP boundary
+    return x, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
+            remat: str = "none"):
+    """Returns final hidden states (B, S_total, D) and summed aux loss."""
+    x = layers.embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype) @ params["patch_proj"].astype(
+            x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_apply(lp, x, cfg, positions)
+        return (x, aux + a), None
+
+    if remat != "none":
+        body = jax.checkpoint(
+            body, policy=REMAT_POLICIES[remat],
+            prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               params["layers"])
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: str = "none"):
+    """batch: tokens (B,S), labels (B,S) [-100 = ignore], optional
+    patch_embeds (B,P,d_frontend)."""
+    prefix = batch.get("patch_embeds")
+    x, aux = forward(params, batch["tokens"], cfg, prefix_embeds=prefix,
+                     remat=remat)
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:]
+    return layers.chunked_lm_loss(params, x, batch["labels"], cfg) + aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len: int,
+            prefix_embeds=None):
+    """Run the prompt, build stacked KV caches, return last-token logits."""
+    x = layers.embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype) @ params["patch_proj"].astype(
+            x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    pad = max_len - s
+
+    def body(x, lp):
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, (k, v) = layers.attn_apply(
+            lp["attn"], h, cfg, positions=positions, return_kv=True)
+        x = x + a
+        h = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if _is_moe(cfg):
+            y, _ = moe.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = layers.swiglu_apply(lp["mlp"], h)
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x + y, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.lm_logits(params, x[:, -1:], cfg)
+    cache = KVCache(k=ks, v=vs, index=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cache: KVCache, tokens, cfg: ModelConfig):
+    """tokens: (B, 1). Returns (logits (B,1,V), updated cache).
+
+    The stacked cache is scan CARRY, updated in place per layer — XLA
+    aliases carry buffers, so exactly one cache copy is live."""
+    x = layers.embed_tokens(params, tokens, cfg)
+
+    def body(carry, xs):
+        x, ks, vs = carry
+        lp, i = xs
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, ks, vs = layers.attn_decode_stacked(
+            lp["attn"], h, cfg, ks, vs, i, cache.index)
+        x = x + a
+        h = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if _is_moe(cfg):
+            y, _ = moe.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = layers.swiglu_apply(lp["mlp"], h)
+        return (x + y, ks, vs), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache.k, cache.v),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.lm_logits(params, x, cfg)
+    return logits, KVCache(k=ks, v=vs, index=cache.index + 1)

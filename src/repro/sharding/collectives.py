@@ -1,0 +1,45 @@
+"""Distributed-optimization helpers: compressed gradients + overlap flags.
+
+``compress_tree`` casts gradients to bf16 with error feedback *before* the
+data-parallel reduction XLA inserts (halving DP all-reduce bytes); the
+residual rides in the optimizer state so the update is unbiased over time.
+
+``latency_hiding_flags`` returns the XLA flags that enable the
+latency-hiding scheduler (compute/collective overlap) on real TPU runs;
+the launcher exports them, the CPU container ignores them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_tree(grads, residual):
+    """bf16 compression with error feedback. residual=None -> zeros."""
+    if residual is None:
+        residual = jax.tree.map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def comp(g, r):
+        gf = g.astype(jnp.float32) + r
+        gc = gf.astype(jnp.bfloat16)
+        return gc, gf - gc.astype(jnp.float32)
+
+    pairs = jax.tree.map(comp, grads, residual)
+    comp_g = jax.tree.map(lambda p: p[0], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp_g, new_res
+
+
+LATENCY_HIDING_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+)
+
+
+def latency_hiding_flags() -> str:
+    return LATENCY_HIDING_FLAGS

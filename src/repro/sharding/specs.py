@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules → PartitionSpecs over the (pod, data, model) mesh.
+
+Models are sharding-agnostic: they tag activations with *logical* axis names
+via :func:`shard` (a no-op outside a :class:`ShardingCtx`), and parameter
+specs are inferred from tree paths by regex rules (t5x-style), so one rules
+table serves every architecture.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis name → mesh axes (None = replicate)."""
+
+    batch: tuple = ("data",)          # ('pod','data') on multi-pod meshes
+    model: str = "model"              # TP axis
+    fsdp: tuple = ("data",)           # parameter sharding axes
+
+    def logical(self, name: Optional[str]):
+        if name is None:
+            return None
+        if name == "batch":
+            return self.batch
+        if name in ("heads", "ff", "vocab", "experts", "model", "seq"):
+            return self.model
+        if name == "batch_heads":   # (B·H) flattened dims: data × model
+            m = (self.model,) if self.model else ()
+            return tuple(self.batch) + m
+        if name == "fsdp":
+            return self.fsdp
+        raise KeyError(name)
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: ShardingRules
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: ShardingRules):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ShardingCtx(mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def shard(x, *logical_axes):
+    """Constrain activation ``x`` to logical axes; no-op without context.
+
+    Dims not divisible by their mesh-axis product are left unconstrained
+    (GSPMD would otherwise pad — e.g. 40 heads on a 16-way TP axis)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    parts = []
+    for dim, a in zip(x.shape, logical_axes):
+        axes = ctx.rules.logical(a)
+        if axes is not None and dim % _axis_size(ctx.mesh, axes) != 0:
+            axes = None
+        parts.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*parts)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by tree-path regex.  Paths look like
+# "layers/attn/wq", "embed", "layers/moe/w_up", ... (stacked-layer leading
+# axis, if any, is handled by rank padding: rules give the TRAILING dims).
+# ---------------------------------------------------------------------------
+
+# (regex, trailing logical dims) — first match wins.
+_PARAM_RULES: Sequence[tuple] = (
+    (r"(^|/)embed$",        ("vocab", "fsdp")),
+    (r"(^|/)lm_head$",      ("fsdp", "vocab")),
+    (r"(^|/)w[qkv]$",       ("fsdp", "heads")),
+    (r"(^|/)wo$",           ("heads", "fsdp")),
+    (r"(^|/)(wi|wg)$",      ("fsdp", "ff")),
+    (r"(^|/)wd$",           ("ff", "fsdp")),
+    (r"(^|/)router$",       ("fsdp", None)),
+    (r"(^|/)(e_wi|e_wg)$",  ("experts", "fsdp", None)),
+    (r"(^|/)e_wd$",         ("experts", None, "fsdp")),
+    # Mamba: channel dim (d_inner) is the TP axis; out_proj contracts over
+    # it (standard TP pair: column-parallel in, row-parallel out).
+    (r"(^|/)in_proj$",      ("fsdp", "model")),
+    (r"(^|/)out_proj$",     ("model", "fsdp")),
+    (r"(^|/)x_proj$",       ("model", None)),
+    (r"(^|/)dt_proj$",      (None, "model")),
+    (r"(^|/)(r_proj|k_proj|v_proj|g_proj|w_proj|patch_proj|frame_proj|"
+     r"cr_proj)$", ("fsdp", None)),
+    (r"(^|/)ck_proj$",      ("fsdp", "ff")),
+    (r"(^|/)cv_proj$",      ("ff", "fsdp")),
+    (r".*",                 None),   # default: replicate
+)
+
+
+def param_spec(path: str, shape, rules: ShardingRules,
+               mesh: Optional[Mesh] = None) -> P:
+    ndim = len(shape)
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            if logical is None:
+                return P()
+            axes = [rules.logical(a) for a in logical]
+            pad = ndim - len(axes)
+            if pad < 0:   # param smaller than rule (e.g. fused bias) → replicate
+                return P()
+            axes = [None] * pad + axes
+            if mesh is not None:   # drop indivisible constraints
+                axes = [None if (a is not None
+                                 and shape[i] % _axis_size(mesh, a) != 0)
+                        else a for i, a in enumerate(axes)]
+            return P(*axes)
+    return P()
+
+
+def tree_paths(tree) -> dict:
+    """Flatten a pytree into {path: leaf} with '/'-joined key paths."""
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}" if prefix else str(i), v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def param_shardings(params, mesh: Mesh, rules: ShardingRules):
+    """Pytree of NamedShardings matching ``params`` structure."""
+    paths = tree_paths(params)
+    specs = {p: param_spec(p, tuple(getattr(v, "shape", ())), rules, mesh)
+             for p, v in paths.items()}
+
+    def rebuild(prefix, node):
+        if isinstance(node, dict):
+            return {k: rebuild(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [rebuild(f"{prefix}/{i}" if prefix else str(i), v)
+                 for i, v in enumerate(node)]
+            return type(node)(t)
+        return NamedSharding(mesh, specs[prefix])
+
+    return rebuild("", params)

@@ -1,0 +1,62 @@
+"""Serving steps: prefill (prompt → cache) and decode (one token/step),
+uniform across the ten architecture families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import get_model
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            return model.prefill(params, batch, cfg, max_len=max_len)
+        if cfg.family == "vlm":
+            # cache must hold prompt + patch-prefix tokens
+            return model.prefill(params, batch["tokens"], cfg,
+                                 max_len=max_len + cfg.n_frontend_tokens,
+                                 prefix_embeds=batch["patch_embeds"])
+        if cfg.family in ("ssm",):
+            return model.prefill(params, batch["tokens"], cfg)
+        return model.prefill(params, batch["tokens"], cfg, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, sample: str = "greedy",
+                     temperature: float = 1.0):
+    model = get_model(cfg)
+
+    def pick(logits, rng):
+        lf = logits[:, -1].astype(jnp.float32)
+        if sample == "greedy":
+            return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, lf / temperature).astype(jnp.int32)
+
+    def decode_step(params, state, tokens, rng=None):
+        """tokens: (B, 1) current token. Returns (next_tokens, new state)."""
+        if cfg.family == "encdec":
+            cache, cross = state
+            logits, cache = model.decode_step(params, cache, cross, tokens,
+                                              cfg)
+            new_state = (cache, cross)
+        else:
+            logits, new_state = model.decode_step(params, state, tokens, cfg)
+        nxt = pick(logits, rng)
+        return nxt[:, None], new_state, logits
+
+    return decode_step
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs for (state, tokens) of one decode step (dry-run)."""
+    model = get_model(cfg)
+    state = jax.eval_shape(
+        lambda: model.make_decode_state(cfg, batch, cache_len))
+    # state caches start "filled" at cache_len - 1 (decoding the last slot)
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return state, tokens

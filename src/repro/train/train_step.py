@@ -1,0 +1,83 @@
+"""Train step factory: loss → grads (remat, microbatch accumulation,
+optional bf16 gradient compression with error feedback) → AdamW."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import get_model
+from repro.models.config import ModelConfig
+from repro.sharding.collectives import compress_tree
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    remat: str = "full"          # none | full | dots | dots_no_batch
+    grad_accum: int = 1          # microbatch accumulation steps
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+
+
+def init_train_state(rng, cfg: ModelConfig) -> dict:
+    params = get_model(cfg).init(rng, cfg)
+    state = dict(params=params, opt=opt.init(params))
+    return state
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams):
+    model = get_model(cfg)
+    adamw = hp.adamw
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, cfg, remat=hp.remat)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hp.grad_accum > 1:
+            def split(x):
+                b = x.shape[0]
+                a = hp.grad_accum
+                return x.reshape(a, b // a, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_sum + loss,
+                        jax.tree.map(jnp.add, g_sum, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), micro)
+            loss = loss / hp.grad_accum
+            grads = jax.tree.map(lambda g: g / hp.grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if adamw.compress_grads:
+            grads, residual = compress_tree(
+                grads, state.get("grad_residual"))
+        new_params, new_opt, metrics = opt.update(
+            grads, state["opt"], params, adamw)
+        new_state = dict(params=new_params, opt=new_opt)
+        if adamw.compress_grads:
+            new_state["grad_residual"] = residual
+        metrics = dict(loss=loss, **metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, hp: Optional[TrainHParams] = None):
+    model = get_model(cfg)
+    remat = hp.remat if hp else "none"
+
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch, cfg, remat=remat)
+
+    return eval_step

@@ -1,0 +1,130 @@
+"""Multi-device paths (shard_map engines, EP MoE, distributed train step).
+
+Device count is locked at jax init, so these run in subprocesses with
+forced host devices."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_boruvka_multidevice_exact():
+    out = run_child("""
+import numpy as np, jax, json
+from repro.core import generators, kruskal_ref
+from repro.core.boruvka_dist import minimum_spanning_forest
+mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+g = generators.generate("rmat", 10, seed=3)
+want = kruskal_ref.kruskal(g)
+got, stats = minimum_spanning_forest(g, mesh=mesh)
+assert np.array_equal(got.edge_mask, want.edge_mask)
+print(json.dumps(dict(ok=True, rounds=stats.rounds)))
+""")
+    assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+def test_ghs_multidevice_exact():
+    out = run_child("""
+import numpy as np, jax, json
+from repro.core import generators, kruskal_ref
+from repro.core.ghs_message import minimum_spanning_forest
+mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+g = generators.generate("rmat", 7, seed=5)
+want = kruskal_ref.kruskal(g)
+got, stats = minimum_spanning_forest(g, mesh=mesh)
+assert np.array_equal(got.edge_mask, want.edge_mask)
+print(json.dumps(dict(ok=True, steps=stats.supersteps,
+                      remote=stats.sent_remote)))
+""", devices=4)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"] and rec["remote"] > 0   # real cross-shard traffic
+
+
+def test_ep_moe_matches_ragged_when_dropfree():
+    run_child("""
+import jax, jax.numpy as jnp
+from repro.models import moe, moe_ep
+from repro.launch.mesh import make_host_mesh, make_rules
+from repro.sharding.specs import use_sharding
+from repro.models.config import ModelConfig
+moe_ep.capacity = lambda tokens, cfg, e_pad: tokens   # drop-free
+cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=64, n_heads=4,
+                  n_kv_heads=4, d_ff=128, vocab=128, n_experts=16, top_k=2,
+                  d_expert=32, n_shared=1, d_shared=64,
+                  compute_dtype="float32")
+p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 64))
+y_ref, _ = moe.moe_apply(p, x, cfg)
+mesh = make_host_mesh(2, 4)
+with use_sharding(mesh, make_rules(mesh)):
+    y_ep, _ = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg))(p, x)
+err = float(jnp.abs(y_ep - y_ref).max())
+assert err < 1e-4, err
+print("ok", err)
+""")
+
+
+def test_distributed_train_step_and_elastic_restore(tmp_path):
+    out = run_child(f"""
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_rules
+from repro.sharding.specs import param_shardings, use_sharding
+from repro.train.train_step import TrainHParams, init_train_state, make_train_step
+from repro.models.api import synth_batch
+from repro.checkpoint import ckpt as ckpt_lib
+cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+mesh = make_host_mesh(2, 4)
+rules = make_rules(mesh)
+hp = TrainHParams(remat="full", grad_accum=2)
+step = make_train_step(cfg, hp)
+state = init_train_state(jax.random.PRNGKey(0), cfg)
+psh = param_shardings(state["params"], mesh, rules)
+state = dict(params=jax.device_put(state["params"], psh),
+             opt=dict(m=jax.device_put(state["opt"]["m"], psh),
+                      v=jax.device_put(state["opt"]["v"], psh),
+                      step=state["opt"]["step"]))
+batch = synth_batch(0, cfg, 4, 64)
+with use_sharding(mesh, rules):
+    jstep = jax.jit(step)
+    state, m1 = jstep(state, batch)
+    state, m2 = jstep(state, batch)
+assert np.isfinite(float(m2["loss"]))
+ckpt_lib.save({json.dumps(str(tmp_path))}, 2, state)
+print(json.dumps(dict(ok=True, loss=float(m2["loss"]))))
+""")
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"]
+    # elastic: restore the 8-device checkpoint on 4 devices
+    run_child(f"""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_rules
+from repro.sharding.specs import param_shardings
+from repro.train.train_step import init_train_state
+from repro.checkpoint import ckpt as ckpt_lib
+cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+mesh = make_host_mesh(2, 2)
+rules = make_rules(mesh)
+state = init_train_state(jax.random.PRNGKey(0), cfg)
+psh = param_shardings(state["params"], mesh, rules)
+shardings = dict(params=psh, opt=dict(m=psh, v=psh, step=None))
+restored, meta = ckpt_lib.restore({json.dumps(str(tmp_path))}, state,
+                                  shardings=shardings)
+assert meta["step"] == 2
+print("elastic ok")
+""", devices=4)

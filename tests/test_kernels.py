@@ -1,0 +1,178 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode vs jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+RNG = np.random.default_rng(0)
+
+
+# --- segment_min -----------------------------------------------------------
+
+@pytest.mark.parametrize("m,s", [(512, 3), (2048, 64), (4100, 257), (1024, 1)])
+def test_segment_min_sweep(m, s):
+    from repro.kernels.segment_min import ops, ref
+    seg = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    val = RNG.integers(0, 2**32 - 2, m, dtype=np.uint32)
+    got = ops.segment_min_sorted(jnp.asarray(val), jnp.asarray(seg),
+                                 num_segments=s, block=512)
+    want = ref.segment_min(jnp.asarray(val), jnp.asarray(seg), s)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_min_unsorted_path():
+    from repro.kernels.segment_min import ops, ref
+    m, s = 3000, 77
+    seg = RNG.integers(0, s, m).astype(np.int32)
+    val = RNG.integers(0, 2**32 - 2, m, dtype=np.uint32)
+    got = ops.segment_min(jnp.asarray(val), jnp.asarray(seg),
+                          num_segments=s, use_pallas=True)
+    want = ref.segment_min(jnp.asarray(val), jnp.asarray(seg), s)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- edge_hash ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [100, 5000])
+def test_edge_hash_sweep(n):
+    from repro.kernels.edge_hash import ops
+    lv = RNG.integers(0, 997, n).astype(np.int32)
+    u = RNG.integers(0, 99991, n).astype(np.int32)
+    pairs = sorted({(a, b) for a, b in zip(lv, u)})
+    lv = np.array([p[0] for p in pairs], np.int32)
+    u = np.array([p[1] for p in pairs], np.int32)
+    pos = np.arange(len(lv), dtype=np.int32)
+    table = ops.build_table(lv, u, pos, int(len(lv) * 4.23) | 1)
+    q_lv = np.concatenate([lv, lv + 7919])
+    q_u = np.concatenate([u, u])
+    got = np.asarray(ops.lookup(table, q_lv, q_u, use_pallas=True))
+    d = {(a, b): p for a, b, p in zip(lv, u, pos)}
+    want = np.array([d.get((a, b), -1) for a, b in zip(q_lv, q_u)], np.int32)
+    assert np.array_equal(got, want)
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,dtype", [
+    (1, 4, 4, 256, 64, jnp.float32),
+    (2, 8, 2, 512, 128, jnp.float32),
+    (1, 4, 1, 256, 64, jnp.bfloat16),
+])
+def test_flash_attention_sweep(b, hq, hkv, s, d, dtype):
+    from repro.kernels.flash_attention import ops, ref
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    want = ref.attention(q, k, v).astype(jnp.float32)
+    got = ops.attention(q, k, v, use_pallas=True).astype(jnp.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    assert float(jnp.abs(got - want).max()) < tol
+
+
+def test_blocked_attention_matches_ref():
+    from repro.kernels.flash_attention import ops, ref
+    q = jnp.asarray(RNG.standard_normal((1, 4, 2048, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 2048, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 2048, 64)), jnp.float32)
+    want = ref.attention(q, k, v)
+    got = ops.blocked_attention(q, k, v, q_chunk=256, kv_chunk=512)
+    assert float(jnp.abs(got - want).max()) < 2e-3
+
+
+def test_attention_noncausal():
+    from repro.kernels.flash_attention import ops, ref
+    q = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    want = ref.attention(q, k, v, causal=False)
+    got = ops.attention(q, k, v, causal=False, use_pallas=True)
+    assert float(jnp.abs(got - want).max()) < 2e-3
+
+
+# --- decode attention --------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [(2, 8, 2, 1024, 64),
+                                          (1, 4, 4, 2048, 128)])
+def test_decode_attention_sweep(b, hq, hkv, s, d):
+    from repro.kernels.decode_attention import ops, ref
+    q = jnp.asarray(RNG.standard_normal((b, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    ln = jnp.asarray(RNG.integers(1, s, b), jnp.int32)
+    want = ref.decode_attention(q, k, v, ln)
+    for impl in ("pallas", "grouped", "chunked"):
+        if impl == "pallas":
+            got = ops.decode_attention(q, k, v, ln, use_pallas=True)
+        elif impl == "grouped":
+            got = ops.grouped_decode_attention(q, k, v, ln)
+        else:
+            got = ops.chunked_decode_attention(q, k, v, ln, chunk=256)
+        assert float(jnp.abs(got - want).max()) < 2e-3, impl
+
+
+# --- rwkv6 -------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,t,d", [(2, 128, 32), (4, 256, 64)])
+def test_wkv6_sweep(bh, t, d):
+    from repro.kernels.rwkv6 import ops, ref
+    r = jnp.asarray(RNG.standard_normal((bh, t, d)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, t, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, t, d)) * 0.5, jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (bh, t, d)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((bh, d)) * 0.3, jnp.float32)
+    want = ref.wkv6(r, k, v, w, u)
+    got = ops.wkv6(r, k, v, w, u, use_pallas=True, chunk=64)
+    assert float(jnp.abs(got - want).max()) < 1e-3
+
+
+def test_wkv6_step_consistency():
+    from repro.kernels.rwkv6 import ops, ref
+    bh, t, d = 2, 16, 16
+    r, k, v = (jnp.asarray(RNG.standard_normal((bh, t, d)) * 0.5,
+                           jnp.float32) for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.8, 0.99, (bh, t, d)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((bh, d)) * 0.3, jnp.float32)
+    want, s_want = ref.wkv6(r, k, v, w, u, return_state=True)
+    s = jnp.zeros((bh, d, d))
+    outs = []
+    for i in range(t):
+        s, o = ops.wkv6_step(s, r[:, i], k[:, i], v[:, i], w[:, i], u)
+        outs.append(o)
+    assert float(jnp.abs(jnp.stack(outs, 1) - want).max()) < 1e-3
+    assert float(jnp.abs(s - s_want).max()) < 1e-3
+
+
+# --- mamba scan --------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,dim,n", [(1, 128, 32, 8), (2, 256, 64, 16)])
+def test_selective_scan_sweep(b, t, dim, n):
+    from repro.kernels.mamba_scan import ops, ref
+    x = jnp.asarray(RNG.standard_normal((b, t, dim)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, t, dim)), jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((b, t, n)) * 0.5, jnp.float32)
+    cc = jnp.asarray(RNG.standard_normal((b, t, n)) * 0.5, jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, (dim, n)), jnp.float32)
+    d = jnp.asarray(RNG.standard_normal(dim) * 0.1, jnp.float32)
+    want = ref.selective_scan(x, dt, bb, cc, a, d)
+    got = ops.selective_scan(x, dt, bb, cc, a, d, use_pallas=True, chunk=64)
+    assert float(jnp.abs(got - want).max()) < 1e-3
+
+
+def test_selective_scan_step_consistency():
+    from repro.kernels.mamba_scan import ops, ref
+    b, t, dim, n = 1, 12, 16, 4
+    x = jnp.asarray(RNG.standard_normal((b, t, dim)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.1, (b, t, dim)), jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((b, t, n)) * 0.5, jnp.float32)
+    cc = jnp.asarray(RNG.standard_normal((b, t, n)) * 0.5, jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2.0, (dim, n)), jnp.float32)
+    d = jnp.asarray(RNG.standard_normal(dim) * 0.1, jnp.float32)
+    want, h_want = ref.selective_scan(x, dt, bb, cc, a, d, return_state=True)
+    h = jnp.zeros((b, dim, n))
+    outs = []
+    for i in range(t):
+        h, y = ref.selective_scan_step(h, x[:, i], dt[:, i], bb[:, i],
+                                       cc[:, i], a, d)
+        outs.append(y)
+    assert float(jnp.abs(jnp.stack(outs, 1) - want).max()) < 1e-3
+    assert float(jnp.abs(h - h_want).max()) < 1e-3

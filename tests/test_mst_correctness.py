@@ -1,0 +1,84 @@
+"""Both MST engines vs the Kruskal oracle — edge-set-exact equality."""
+import numpy as np
+import pytest
+
+from repro.core import generators, kruskal_ref
+from repro.core.mst_api import minimum_spanning_forest
+from repro.core.params import GHSParams
+
+
+@pytest.mark.parametrize("kind", ["rmat", "ssca2", "random", "disconnected"])
+def test_boruvka_matches_kruskal(kind):
+    g = generators.generate(kind, 9, seed=11)
+    want = kruskal_ref.kruskal(g)
+    got, stats = minimum_spanning_forest(g, method="boruvka")
+    assert np.array_equal(got.edge_mask, want.edge_mask)
+    assert got.num_components == want.num_components
+    assert stats.rounds >= 1
+
+
+@pytest.mark.parametrize("kind", ["rmat", "disconnected"])
+def test_ghs_matches_kruskal(kind):
+    g = generators.generate(kind, 7, seed=3)
+    want = kruskal_ref.kruskal(g)
+    got, stats = minimum_spanning_forest(g, method="ghs")
+    assert np.array_equal(got.edge_mask, want.edge_mask)
+    assert got.num_components == want.num_components
+    assert stats.halted_fragments >= 1
+
+
+def test_numpy_boruvka_matches_kruskal():
+    g = generators.generate("random", 11, seed=5)
+    want = kruskal_ref.kruskal(g)
+    got = kruskal_ref.boruvka_numpy(g)
+    assert np.array_equal(got.edge_mask, want.edge_mask)
+
+
+@pytest.mark.parametrize("params", [
+    GHSParams(use_hashing=False, relaxed_test_queue=False,
+              compress_messages=False),                       # base version
+    GHSParams(use_hashing=False, hash_table_factor=-1.0,
+              relaxed_test_queue=False),                      # binary search
+    GHSParams(relaxed_test_queue=True, check_frequency=1),
+    GHSParams(relaxed_test_queue=True, check_frequency=7),
+    GHSParams(),                                              # final version
+])
+def test_ghs_ablations_all_exact(params):
+    g = generators.generate("rmat", 7, seed=9)
+    want = kruskal_ref.kruskal(g)
+    got, _ = minimum_spanning_forest(g, method="ghs", params=params)
+    assert np.array_equal(got.edge_mask, want.edge_mask)
+
+
+def test_duplicate_weights_tiebreak():
+    """C6: identical weights are resolved by the unique edge-id lane."""
+    rng = np.random.default_rng(0)
+    n, m = 128, 1024
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.choice(np.asarray([0.25, 0.5, 0.75], np.float32), m)  # collisions
+    from repro.core.graph import preprocess
+    g = preprocess(src, dst, w, n)
+    want = kruskal_ref.kruskal(g)
+    got_b, _ = minimum_spanning_forest(g, method="boruvka")
+    got_g, _ = minimum_spanning_forest(g, method="ghs")
+    assert np.array_equal(got_b.edge_mask, want.edge_mask)
+    assert np.array_equal(got_g.edge_mask, want.edge_mask)
+
+
+def test_single_vertex_and_empty():
+    from repro.core.graph import preprocess
+    g = preprocess(np.zeros(0), np.zeros(0), np.zeros(0, np.float32), 4)
+    got, _ = minimum_spanning_forest(g, method="boruvka")
+    assert got.num_tree_edges == 0
+    assert got.num_components == 4
+
+
+def test_boruvka_pallas_segmin_path():
+    """Engine with the Pallas segment-min kernel is bit-identical."""
+    from repro.core.params import GHSParams
+    g = generators.generate("rmat", 8, seed=21)
+    want, _ = minimum_spanning_forest(g, method="boruvka")
+    got, _ = minimum_spanning_forest(
+        g, method="boruvka", params=GHSParams(use_pallas=True))
+    assert np.array_equal(got.edge_mask, want.edge_mask)

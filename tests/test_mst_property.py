@@ -1,0 +1,56 @@
+"""Property-based invariants of the MST engines (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import preprocess
+from repro.core.kruskal_ref import kruskal
+from repro.core.mst_api import minimum_spanning_forest
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(min_value=2, max_value=48))
+    m = draw(st.integers(min_value=0, max_value=160))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.random(m, dtype=np.float32) * 0.98 + 0.01
+    return preprocess(src, dst, w, n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_boruvka_forest_invariants(g):
+    want = kruskal(g)
+    got, _ = minimum_spanning_forest(g, method="boruvka")
+    # exact forest equality under the shared total order
+    assert np.array_equal(got.edge_mask, want.edge_mask)
+    # structural invariants
+    assert got.num_tree_edges == g.num_vertices - got.num_components
+    assert got.total_weight <= float(g.weight.sum()) + 1e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(graphs())
+def test_ghs_forest_invariants(g):
+    want = kruskal(g)
+    got, _ = minimum_spanning_forest(g, method="ghs")
+    assert np.array_equal(got.edge_mask, want.edge_mask)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=2, max_value=40))
+def test_packed_key_order(seed, n):
+    """Packed uint64 keys sort exactly like (weight, edge_id) tuples."""
+    from repro.core import keys
+    rng = np.random.default_rng(seed)
+    w = rng.random(n, dtype=np.float32)
+    eid = rng.permutation(n).astype(np.uint32)
+    packed = keys.pack_keys_np(w, eid)
+    order_packed = np.argsort(packed, kind="stable")
+    order_tuple = np.lexsort((eid, w))
+    assert np.array_equal(order_packed, order_tuple)
+    assert np.array_equal(keys.unpack_weight_np(packed), w)
+    assert np.array_equal(keys.unpack_edge_id_np(packed), eid)

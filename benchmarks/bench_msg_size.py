@@ -19,11 +19,10 @@ import numpy as np
 from repro.core import generators
 from repro.core.ghs_message import minimum_spanning_forest
 from repro.core.params import GHSParams
-import jax
+from repro.compat import make_mesh
 
 kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
-mesh = jax.make_mesh((shards,), ("x",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((shards,), ("x",))
 g = generators.generate(kind, scale, seed=1)
 res, st = minimum_spanning_forest(g, mesh=mesh, collect_history=True)
 by = np.asarray(st.bytes_history, np.float64)      # cumulative remote bytes

@@ -19,6 +19,7 @@ _CHILD = r"""
 import json, os, sys, time
 import numpy as np
 import jax
+from repro.compat import make_mesh
 from repro.core import generators
 from repro.core.boruvka_dist import minimum_spanning_forest
 from repro.core.params import GHSParams
@@ -26,8 +27,7 @@ from repro.core.params import GHSParams
 kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
 mesh = None
 if shards > 1:
-    mesh = jax.make_mesh((shards,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((shards,), ("x",))
 g = generators.generate(kind, scale, seed=1)
 # warmup (compile)
 minimum_spanning_forest(g, mesh=mesh)

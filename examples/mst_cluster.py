@@ -24,8 +24,8 @@ def main():
 
     mesh = None
     if args.shards > 1:
-        mesh = jax.make_mesh((args.shards,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((args.shards,), ("x",))
     g = generators.generate(args.kind, args.scale, seed=7)
     print(f"{args.kind}-{args.scale}: {g.num_vertices} vertices, "
           f"{g.num_edges} edges on {args.shards} shard(s)")

@@ -1,0 +1,31 @@
+"""Version-compat shims over the jax API surface the engines depend on.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.sharding.AxisType``
+surface but must also run on older jax releases where ``shard_map`` still
+lives in ``jax.experimental`` (with ``check_rep`` instead of ``check_vma``)
+and meshes carry no axis types.  Every mesh/shard_map construction in the
+repo goes through this module so the engines, benchmarks, and subprocess
+tests agree on one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API has them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axis_names)

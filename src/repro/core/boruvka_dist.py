@@ -1,56 +1,325 @@
-"""Optimized synchronous distributed Borůvka/GHS engine (beyond-paper, §3 of DESIGN).
+"""Device-resident synchronous Borůvka/GHS engine (beyond-paper, DESIGN §3-4).
 
 Re-formulates GHS for SPMD hardware: per round, every fragment's minimum
-outgoing edge (MOE) is a segment-min over (weight-bits, edge-id) — GHS's
-``Test``/``Report`` message waves collapse into two scatter-min passes and one
-fused ``pmin`` collective; fragment merging is min-hooking + pointer doubling
-(the ``Connect``/``Initiate`` waves).  The paper's point-to-point short-message
-traffic — which it identifies as its limiting factor (§4.2) — is off the
-critical path entirely.
+outgoing edge (MOE) is ONE segmented min over packed 64-bit keys
+``(weight_bits << 32) | edge_id`` — GHS's ``Test``/``Report`` message waves
+collapse into a single scatter-min sweep and a single fused ``pmin``
+collective (the two-phase weight + tie-break election of earlier versions is
+gone; the packed key resolves both in the same reduction).  Fragment merging
+is min-hooking + pointer doubling (the ``Connect``/``Initiate`` waves).  The
+paper's point-to-point short-message traffic — which it identifies as its
+limiting factor (§4.2) — is off the critical path entirely.
 
-Edges are block-distributed across devices (`shard_map` over axis ``"x"``);
+The round loop itself is device-resident: a ``jax.lax.while_loop`` advances
+up to ``check_frequency`` rounds per dispatch, accumulating tree edges into
+an on-device ``edge_mask`` and testing termination on device, so the host
+synchronizes ONCE per compaction interval instead of once (or more) per
+round.  Edge compaction is an on-device prefix-sum stream compaction into
+power-of-two buckets; edges never round-trip through host memory.
+
+Edges are block-distributed across devices (shard_map over axis ``"x"``);
 the fragment-label array ``comp`` is replicated (paper layout: vertices are
-block-distributed, but labels are small — int32 per vertex).
-
-Tie-breaking uses the two-word (weight_bits:u32, edge_id:u32) total order, the
-same order as :mod:`repro.core.keys` — see DESIGN.md §2/C3 for why this stays
-in 32-bit lanes instead of the paper's 64-bit ``special_id``.
+block-distributed, but labels are small — int32 per vertex).  The legacy
+host-driven loop is retained as ``params.round_loop == "host"`` for the
+before/after measurement in ``benchmarks/bench_round_loop.py`` and as an
+ablation baseline; both loops are bit-identical to the Kruskal oracle.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.core import keys as keys_lib
 from repro.core import union_find
-from repro.core.graph import Graph
+from repro.core.graph import PAD_VERTEX, Graph
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 
 INF32 = np.uint32(0xFFFFFFFF)
+INF_KEY = keys_lib.INF_KEY
 _AXIS = "x"
 
 
+def _pad_pow2(arrs, multiple: int, fill_vals):
+    """Pad to the next power-of-two multiple of ``multiple``.
+
+    src/dst are filled with PAD_VERTEX (far out of vertex range — clamped
+    gathers make padding edges self-loops by construction, see graph.py),
+    keys/weights with their INF sentinel.
+    """
+    m = arrs[0].shape[0]
+    target = multiple
+    while target < m:
+        target *= 2
+    pad = target - m
+    return [
+        np.concatenate([a, np.full(pad, f, a.dtype)]) if pad else a
+        for a, f in zip(arrs, fill_vals)
+    ]
+
+
+def _pow2ceil(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class BoruvkaStats:
+    rounds: int = 0
+    compactions: int = 0
+    edges_scanned: int = 0          # Σ active (padded) edges per round
+    host_syncs: int = 0             # blocking host↔device transfer points
+    intervals: int = 0              # device-loop dispatches (device loop only)
+    active_history: tuple = ()      # host loop: global active edges per round;
+                                    # device loop: MAX per-shard active count
+                                    # per interval (the compaction-cap census)
+
+
 # ---------------------------------------------------------------------------
-# One Borůvka round (runs per shard; axis_name=None → single device)
+# Fused device-resident loop (round_loop="device", the default)
 # ---------------------------------------------------------------------------
 
-def _segmin_scatter(n: int, idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+def _run_interval(
+    comp: jnp.ndarray,
+    mask: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    key: jnp.ndarray,
+    block0: jnp.ndarray,
+    rounds: jnp.ndarray,
+    *,
+    axis_name: Optional[str],
+    use_pallas: bool,
+):
+    """Advance up to ``rounds`` Borůvka rounds entirely on device.
+
+    State per shard: replicated fragment labels ``comp``, the per-slot tree
+    bitmap ``mask`` (aligned with the ORIGINAL block layout — slot i on shard
+    s is canonical edge ``s*block0 + i``), and the (possibly compacted) local
+    edge arrays.  Returns the new state plus a replicated (done, rounds-run,
+    max local active count) triple — the ONLY values the host ever reads.
+    """
+    n = comp.shape[0]
+    cap = mask.shape[0]
+    pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
+    eid_base = (
+        jax.lax.axis_index(axis_name) * block0
+        if axis_name else jnp.zeros_like(block0)
+    )
+
+    def one_round(comp, mask):
+        cs = comp[src]          # PAD_VERTEX clamps → padding is a self-loop
+        cd = comp[dst]
+        alive = (cs != cd) & (key != INF_KEY)
+        k = jnp.where(alive, key, INF_KEY)
+        # Fused MOE election: ONE segmented min over both endpoints, ONE
+        # collective.  The packed key carries the tie-break, so no second
+        # (weight-match, edge-id) pass and no second pmin.
+        seg = jnp.concatenate([cs, cd]).astype(jnp.int32)
+        from repro.kernels.segment_min import ops as segops
+        best = segops.segment_min64(
+            jnp.concatenate([k, k]), seg, num_segments=n,
+            use_pallas=use_pallas)
+        best = pmin(best)
+        winners = alive & ((best[cs] == k) | (best[cd] == k))
+        # Record wins into the sharded bitmap; a winning edge always lives on
+        # the shard that owns its canonical slot, so the scatter is local.
+        slot = keys_lib.unpack_edge_id(key).astype(jnp.int64) - eid_base
+        mask = mask.at[jnp.where(winners, slot, cap)].set(True, mode="drop")
+        # Merge: min-hooking + pointer doubling (GHS Connect/Initiate).
+        hi = jnp.maximum(cs, cd).astype(jnp.uint32)
+        lo = jnp.minimum(cs, cd).astype(jnp.uint32)
+        parent = union_find.hook_min(n, hi, lo, winners)
+        parent = pmin(parent)
+        parent = union_find.pointer_double(parent)
+        done = jnp.all(best == INF_KEY)
+        return parent[comp], mask, done
+
+    def cond(c):
+        r, _, _, done = c
+        return jnp.logical_not(done) & (r < rounds)
+
+    def body(c):
+        r, comp, mask, _ = c
+        comp, mask, done = one_round(comp, mask)
+        return r + 1, comp, mask, done
+
+    r, comp, mask, done = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), comp, mask, jnp.bool_(False)))
+
+    # Active-edge census for the host's compaction-bucket choice.
+    active = (comp[src] != comp[dst]) & (key != INF_KEY)
+    n_active = active.sum(dtype=jnp.int32)
+    if axis_name:
+        n_active = jax.lax.pmax(n_active, axis_name)
+    return comp, mask, done, r, n_active
+
+
+def _compact_shard(comp, src, dst, key, *, cap: int):
+    """Prefix-sum stream compaction of the local edge block to ``cap`` slots.
+
+    Runs entirely on device — dead edges (endpoints in the same fragment)
+    are dropped, survivors slide to the front, the tail refills with the
+    inert padding sentinel.  ``cap`` is static (a power-of-two bucket), so
+    shapes stay rectangular across shards.
+    """
+    keep = (comp[src] != comp[dst]) & (key != INF_KEY)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    idx = jnp.where(keep, pos, cap)
+    new_src = jnp.full((cap,), PAD_VERTEX, jnp.int32).at[idx].set(
+        src, mode="drop")
+    new_dst = jnp.full((cap,), PAD_VERTEX, jnp.int32).at[idx].set(
+        dst, mode="drop")
+    new_key = jnp.full((cap,), INF_KEY, jnp.uint64).at[idx].set(
+        key, mode="drop")
+    return new_src, new_dst, new_key
+
+
+@functools.lru_cache(maxsize=64)
+def _build_interval_fn(mesh: Optional[Mesh], use_pallas: bool) -> Callable:
+    # block0/rounds are traced scalars, so one executable serves every
+    # interval length and graph size per (mesh, shapes).  comp/mask are the
+    # mutated state — donate so device buffers are reused in place (CPU does
+    # not implement donation; skip to avoid warnings).
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    if mesh is None:
+        fn = partial(_run_interval, axis_name=None, use_pallas=use_pallas)
+        return jax.jit(fn, donate_argnums=donate)
+    fn = compat.shard_map(
+        partial(_run_interval, axis_name=_AXIS, use_pallas=use_pallas),
+        mesh,
+        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS), P(), P()),
+        out_specs=(P(), P(_AXIS), P(), P(), P()),
+    )
+    return jax.jit(fn, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_compact_fn(mesh: Optional[Mesh], cap: int) -> Callable:
+    # No donation here: compaction is shrink-only, so the inputs are strictly
+    # larger than the outputs and could never alias them anyway.
+    if mesh is None:
+        return jax.jit(partial(_compact_shard, cap=cap))
+    fn = compat.shard_map(
+        partial(_compact_shard, cap=cap), mesh,
+        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS)),
+        out_specs=(P(_AXIS), P(_AXIS), P(_AXIS)),
+    )
+    return jax.jit(fn)
+
+
+def _device_engine(
+    graph: Graph,
+    params: GHSParams,
+    mesh: Optional[Mesh],
+    max_rounds: Optional[int],
+) -> tuple[ForestResult, BoruvkaStats]:
+    n, m = graph.num_vertices, graph.num_edges
+    num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+    chunk = max(8 * num_shards, num_shards)
+
+    wbits = graph.weight.view(np.uint32)
+    if np.any(wbits == INF32):
+        raise ValueError("weights collide with the INF sentinel")
+
+    with enable_x64():
+        src_p, dst_p, key_p = _pad_pow2(
+            [graph.src.astype(np.int32), graph.dst.astype(np.int32),
+             graph.packed_keys()],
+            chunk, [PAD_VERTEX, PAD_VERTEX, INF_KEY])
+        m0 = src_p.shape[0]
+        block0 = m0 // num_shards
+
+        edge_sh = NamedSharding(mesh, P(_AXIS)) if mesh is not None else None
+        repl_sh = NamedSharding(mesh, P()) if mesh is not None else None
+
+        def put(a, sh):
+            return jax.device_put(a, sh) if sh is not None else jnp.asarray(a)
+
+        src_d = put(src_p, edge_sh)
+        dst_d = put(dst_p, edge_sh)
+        key_d = put(key_p, edge_sh)
+        comp_dev = put(np.arange(n, dtype=np.uint32), repl_sh)
+        mask_dev = put(np.zeros(m0, dtype=bool), edge_sh)
+
+        interval = max(params.check_frequency, 1)
+        cap_rounds = max_rounds or (n + 2)
+        stats = BoruvkaStats()
+        history = []
+        cur_block = block0
+        done = False
+
+        fn = _build_interval_fn(mesh, params.use_pallas)
+        while stats.rounds < cap_rounds:
+            this_rounds = min(interval, cap_rounds - stats.rounds)
+            comp_dev, mask_dev, done_t, r_t, act_t = fn(
+                comp_dev, mask_dev, src_d, dst_d, key_d, block0, this_rounds)
+            # The interval's single host sync: three replicated scalars.
+            done_v, r, n_act = jax.device_get((done_t, r_t, act_t))
+            done = bool(done_v)
+            stats.host_syncs += 1
+            stats.intervals += 1
+            stats.rounds += int(r)
+            stats.edges_scanned += int(r) * cur_block * num_shards
+            history.append(int(n_act))
+            if done:
+                break
+            if params.compaction == "pow2":
+                new_block = max(_pow2ceil(int(n_act)), 8)
+                if new_block < cur_block:   # shrink-only: ≤ log2 recompiles
+                    cfn = _build_compact_fn(mesh, new_block)
+                    src_d, dst_d, key_d = cfn(comp_dev, src_d, dst_d, key_d)
+                    cur_block = new_block
+                    stats.compactions += 1
+        if not done:
+            raise RuntimeError("Borůvka engine failed to converge")
+
+        comp_final, mask_full = jax.device_get((comp_dev, mask_dev))
+        stats.host_syncs += 1
+
+    comp_final = np.asarray(comp_final)
+    # Slot i of the bitmap is canonical edge i (padding slots never set).
+    mask = np.asarray(mask_full)[:m].copy()
+    ncomp = int(np.unique(comp_final).size)
+    total = float(graph.weight[mask].sum(dtype=np.float64))
+    res = ForestResult(
+        total_weight=total,
+        edge_mask=mask,
+        num_components=ncomp,
+        num_tree_edges=int(mask.sum()),
+    )
+    res.check_consistent(n)
+    stats.active_history = tuple(history)
+    return res, stats
+
+
+# ---------------------------------------------------------------------------
+# Legacy host-driven loop (round_loop="host"): per-round syncs + host-side
+# compaction.  Kept as the before/after baseline for bench_round_loop.py.
+# ---------------------------------------------------------------------------
+
+def _segmin_scatter(n, idx, val, order=None):
     """Per-segment min via XLA scatter-min (default path)."""
     return jnp.full((n,), INF32, jnp.uint32).at[idx].min(val)
 
 
-def _segmin_pallas(n: int, idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+def _segmin_pallas(n, idx, val, order=None):
     """Per-segment min via the Pallas sort+scan kernel (TPU hot-spot path;
     interpret-mode on CPU, validated bit-equal to the scatter path)."""
     from repro.kernels.segment_min import ops as segops
     return segops.segment_min(val, idx.astype(jnp.int32), num_segments=n,
-                              use_pallas=True)
+                              use_pallas=True, order=order)
 
 
 def _round_body(
@@ -63,7 +332,7 @@ def _round_body(
     axis_name: Optional[str],
     use_pallas: bool = False,
 ):
-    """One round: elect MOE per fragment, hook, compress, relabel."""
+    """One two-phase round: elect MOE per fragment, hook, compress, relabel."""
     n = comp.shape[0]
     pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
     segmin = _segmin_pallas if use_pallas else _segmin_scatter
@@ -73,14 +342,19 @@ def _round_body(
     alive = (cs != cd) & (wbits != INF32)
     wb = jnp.where(alive, wbits, INF32)
 
+    # Sort once per endpoint array, reuse across both election phases.
+    order_s = jnp.argsort(cs.astype(jnp.int32)) if use_pallas else None
+    order_d = jnp.argsort(cd.astype(jnp.int32)) if use_pallas else None
+
     # Phase 1: best weight per fragment (local scatter-min, global pmin).
-    bw = jnp.minimum(segmin(n, cs, wb), segmin(n, cd, wb))
+    bw = jnp.minimum(segmin(n, cs, wb, order_s), segmin(n, cd, wb, order_d))
     bw = pmin(bw)
 
     # Phase 2: tie-break by unique edge id among weight-matching edges.
     cand_s = jnp.where(alive & (wb == bw[cs]), eid, INF32)
     cand_d = jnp.where(alive & (wb == bw[cd]), eid, INF32)
-    be = jnp.minimum(segmin(n, cs, cand_s), segmin(n, cd, cand_d))
+    be = jnp.minimum(segmin(n, cs, cand_s, order_s),
+                     segmin(n, cd, cand_d, order_d))
     be = pmin(be)
 
     # Winners: the elected MOE edges (each fragment elects exactly one).
@@ -98,51 +372,25 @@ def _round_body(
     return new_comp, winners, done
 
 
-# ---------------------------------------------------------------------------
-# Engine
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class BoruvkaStats:
-    rounds: int = 0
-    compactions: int = 0
-    edges_scanned: int = 0          # Σ active (padded) edges per round
-    active_history: tuple = ()      # active edge count per round (Fig 4 analogue)
-
-
 def _make_round_fn(mesh: Optional[Mesh], use_pallas: bool = False) -> Callable:
     if mesh is None:
         return jax.jit(partial(_round_body, axis_name=None,
                                use_pallas=use_pallas))
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         partial(_round_body, axis_name=_AXIS, use_pallas=use_pallas),
-        mesh=mesh,
+        mesh,
         in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS)),
         out_specs=(P(), P(_AXIS), P()),
-        check_vma=False,
     )
     return jax.jit(fn)
 
 
-def _pad_pow2(arrs, multiple: int, fill_vals):
-    m = arrs[0].shape[0]
-    target = multiple
-    while target < m:
-        target *= 2
-    pad = target - m
-    return [
-        np.concatenate([a, np.full(pad, f, a.dtype)]) if pad else a
-        for a, f in zip(arrs, fill_vals)
-    ]
-
-
-def minimum_spanning_forest(
+def _host_engine(
     graph: Graph,
-    params: GHSParams = DEFAULT_PARAMS,
-    mesh: Optional[Mesh] = None,
-    max_rounds: Optional[int] = None,
+    params: GHSParams,
+    mesh: Optional[Mesh],
+    max_rounds: Optional[int],
 ) -> tuple[ForestResult, BoruvkaStats]:
-    """Run the optimized engine; returns the forest + execution stats."""
     n, m = graph.num_vertices, graph.num_edges
     num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     chunk = max(8 * num_shards, num_shards)
@@ -162,8 +410,11 @@ def minimum_spanning_forest(
         NamedSharding(mesh, P(_AXIS)) if mesh is not None else None
     )
 
+    stats = BoruvkaStats()
+
     def put_edges(arrs):
-        arrs = _pad_pow2(arrs, chunk, [0, 0, INF32, INF32])
+        arrs = _pad_pow2(arrs, chunk, [PAD_VERTEX, PAD_VERTEX, INF32, INF32])
+        stats.host_syncs += 1          # host→device re-upload
         if edge_sharding is not None:
             return [jax.device_put(a, edge_sharding) for a in arrs]
         return [jnp.asarray(a) for a in arrs]
@@ -178,7 +429,6 @@ def minimum_spanning_forest(
     active = np.arange(m, dtype=np.int64)
 
     mask = np.zeros(m, dtype=bool)
-    stats = BoruvkaStats()
     history = []
     cap = max_rounds or (n + 2)
 
@@ -187,8 +437,10 @@ def minimum_spanning_forest(
         stats.rounds += 1
         stats.edges_scanned += int(src_d.shape[0])
         history.append(len(active))
+        stats.host_syncs += 1          # device→host: done flag
         if bool(done):
             break
+        stats.host_syncs += 1          # device→host: winner bitmap + ids
         w = np.asarray(winners)
         if w.any():
             eids = np.asarray(eid_d)[w]
@@ -198,6 +450,7 @@ def minimum_spanning_forest(
             params.compaction == "pow2"
             and (rnd + 1) % max(params.check_frequency, 1) == 0
         ):
+            stats.host_syncs += 1      # device→host: fragment labels
             comp_h = np.asarray(comp_dev)
             keep = comp_h[src[active]] != comp_h[dst[active]]
             if not keep.all():
@@ -222,3 +475,28 @@ def minimum_spanning_forest(
     res.check_consistent(n)
     stats.active_history = tuple(history)
     return res, stats
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def minimum_spanning_forest(
+    graph: Graph,
+    params: GHSParams = DEFAULT_PARAMS,
+    mesh: Optional[Mesh] = None,
+    max_rounds: Optional[int] = None,
+) -> tuple[ForestResult, BoruvkaStats]:
+    """Run the optimized engine; returns the forest + execution stats.
+
+    ``params.round_loop`` selects the loop driver: ``"device"`` (default) is
+    the fused host-sync-free ``lax.while_loop`` engine; ``"host"`` is the
+    legacy per-round host loop.  Both produce bit-identical forests.
+    """
+    if params.round_loop == "host":
+        return _host_engine(graph, params, mesh, max_rounds)
+    if params.round_loop != "device":
+        raise ValueError(
+            f"unknown round_loop {params.round_loop!r}; "
+            "options: 'device', 'host'")
+    return _device_engine(graph, params, mesh, max_rounds)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.ghs_state import (
     ACCEPT, BASIC, BRANCH, CHANGE_CORE, CONNECT, FIND, FOUND, INITIATE,
     REJECT, REJECTED, REPORT, TEST, GHSTopology, ShardState, hash_slot,
@@ -500,12 +501,11 @@ def minimum_spanning_forest(
                 st, act, err = step_core(st, flag)
                 st = ShardState(*[a[None] for a in st])
                 return st, act, err
-            return jax.jit(jax.shard_map(
-                f, mesh=mesh,
+            return jax.jit(compat.shard_map(
+                f, mesh,
                 in_specs=(ShardState(*[P(_AXIS)] * len(ShardState._fields)),),
                 out_specs=(ShardState(*[P(_AXIS)] * len(ShardState._fields)),
                            P(), P()),
-                check_vma=False,
             ))
         state = stack_shards(shards)
         state = jax.device_put(

@@ -110,18 +110,27 @@ def build_csr(graph: Graph) -> CSRAdjacency:
     )
 
 
+# Fill value for padded src/dst slots.  Deliberately FAR out of any vertex
+# range: device gathers clamp it to the last vertex on both endpoints, so a
+# padding edge is a self-loop by construction — inert in every engine even if
+# its weight lane were ever misinitialized.  (Filling with vertex 0, as early
+# versions did, made padding edges self-loops only by luck of the INF weight;
+# a graph whose vertex 0 is isolated exposes the hazard.)
+PAD_VERTEX = np.int32(0x7FFF0000)
+
+
 def pad_edges(
     graph: Graph, multiple: int
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Pad (src, dst, key, valid) so the edge count divides ``multiple``.
 
-    Padding edges are (0, 0) with INF_KEY and valid=False — inert under
-    min-reductions, so shards stay rectangular (SPMD requirement).
+    Padding edges are (PAD_VERTEX, PAD_VERTEX) with INF_KEY and valid=False —
+    inert under min-reductions, so shards stay rectangular (SPMD requirement).
     """
     m = graph.num_edges
     pad = (-m) % multiple
-    src = np.concatenate([graph.src, np.zeros(pad, np.int32)])
-    dst = np.concatenate([graph.dst, np.zeros(pad, np.int32)])
+    src = np.concatenate([graph.src, np.full(pad, PAD_VERTEX, np.int32)])
+    dst = np.concatenate([graph.dst, np.full(pad, PAD_VERTEX, np.int32)])
     key = np.concatenate(
         [graph.packed_keys(), np.full(pad, keys_lib.INF_KEY, np.uint64)]
     )

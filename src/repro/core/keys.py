@@ -20,6 +20,13 @@ IEEE-754 bit patterns are monotonically ordered as unsigned integers.  The low
 
 ``INF_KEY`` (all ones) is the identity for min-reductions ("no outgoing
 edge"), playing the role of the paper's Report(∞).
+
+The optimized engine elects each fragment's minimum outgoing edge with ONE
+segmented min over these packed keys (weight and tiebreak resolved in the
+same reduction); kernels that must stay in 32-bit lanes split a key with
+:func:`split_key_lanes` and compare lexicographically — the orders agree
+bit-for-bit, which is what keeps every engine identical to the Kruskal
+oracle.
 """
 from __future__ import annotations
 
@@ -73,6 +80,19 @@ def jax_f32_bits(w: jnp.ndarray) -> jnp.ndarray:
 
 def jax_bits_f32(bits: jnp.ndarray) -> jnp.ndarray:
     return jnp.asarray(bits, jnp.uint32).view(jnp.float32)
+
+
+def split_key_lanes(key: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(weight-bits, edge-id) uint32 lanes of a packed key.  Lexicographic
+    comparison of the lanes equals unsigned comparison of the uint64 key."""
+    hi = (key >> jnp.uint64(32)).astype(jnp.uint32)
+    lo = (key & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    return hi, lo
+
+
+def combine_key_lanes(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`split_key_lanes`."""
+    return (hi.astype(jnp.uint64) << jnp.uint64(32)) | lo.astype(jnp.uint64)
 
 
 def is_inf_key(key) -> np.ndarray:

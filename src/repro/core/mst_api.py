@@ -23,11 +23,14 @@ def minimum_spanning_forest(
     """Compute the minimum spanning forest of ``graph``.
 
     method='ghs'     — paper-faithful message-driven GHS (the reproduction).
-    method='boruvka' — TPU-native synchronous engine (beyond-paper optimized).
+    method='boruvka' — TPU-native synchronous engine (beyond-paper optimized);
+                       ``params.round_loop`` picks the device-resident fused
+                       loop (default) or the legacy host-driven loop.
 
     Both return (ForestResult, stats); the forest is bit-identical between
-    engines (and to the Kruskal oracle) because all three use the same packed
-    (weight, edge-id) total order.
+    engines and loop drivers (and to the Kruskal oracle) because all of them
+    elect edges under the same packed (weight, edge-id) total order of
+    :mod:`repro.core.keys`.
     """
     if method == "ghs":
         return ghs_message.minimum_spanning_forest(

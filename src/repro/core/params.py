@@ -35,8 +35,11 @@ class GHSParams:
     relaxed_test_queue: bool = True   # C1: separate Test queue
     compress_messages: bool = True    # C3: bit-packed message words
     # Optimized-engine extras (beyond paper).
-    compaction: str = "pow2"          # 'none' | 'pow2' host-side edge compaction
+    compaction: str = "pow2"          # 'none' | 'pow2' lazy edge compaction
     use_pallas: bool = False          # route segment-min through the Pallas kernel
+    round_loop: str = "device"        # 'device': fused lax.while_loop engine
+                                      #   (≤ 1 host sync per compaction interval)
+                                      # 'host': legacy per-round host loop
 
 
 DEFAULT_PARAMS = GHSParams()

@@ -7,9 +7,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import keys as keys_lib
 from repro.kernels.segment_min import ref
 from repro.kernels.segment_min.segment_min import (
-    INF_U32, segmented_min_scan)
+    INF_U32, segmented_min2_scan, segmented_min_scan)
+
+INF_U64 = keys_lib.INF_KEY
+_PAD_SEG = np.int32(0x7FFFFFF0)
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block",
@@ -40,11 +44,65 @@ def segment_min_sorted(
 def segment_min(
     val: jnp.ndarray, seg: jnp.ndarray, *, num_segments: int,
     use_pallas: bool = False, interpret: bool = True,
+    order: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Per-segment min; unsorted input. Pallas path sorts then scans."""
+    """Per-segment min; unsorted input. Pallas path sorts then scans.
+
+    ``order`` — a precomputed ``argsort(seg)`` permutation.  Callers that run
+    several reductions over the same segment array (e.g. the two-pass MOE
+    election) sort once and pass the order in, instead of re-``argsort``-ing
+    inside every call.
+    """
     if not use_pallas:
         return ref.segment_min(val, seg, num_segments)
-    order = jnp.argsort(seg)
+    if order is None:
+        order = jnp.argsort(seg)
     return segment_min_sorted(
         val[order], seg[order], num_segments=num_segments,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block",
+                                             "interpret"))
+def segment_min64_sorted(
+    key: jnp.ndarray, seg: jnp.ndarray, *, num_segments: int,
+    block: int = 1024, interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-segment min over SORTED packed uint64 keys via the pair-lex
+    Pallas scan — the key is split into uint32 lanes so the kernel stays in
+    native VPU word width (requires x64 enabled for the uint64 in/out)."""
+    m = seg.shape[0]
+    pad = (-m) % block
+    if pad:
+        seg = jnp.concatenate([seg, jnp.full(pad, _PAD_SEG, jnp.int32)])
+        key = jnp.concatenate([key, jnp.full(pad, INF_U64, jnp.uint64)])
+    hi, lo = keys_lib.split_key_lanes(key)
+    shi, slo = segmented_min2_scan(seg, hi, lo, block=block,
+                                  interpret=interpret)
+    scan = keys_lib.combine_key_lanes(shi, slo)
+    nxt = jnp.concatenate([seg[1:], jnp.full(1, -3, jnp.int32)])
+    run_end = seg != nxt
+    out = jnp.full((num_segments,), INF_U64, jnp.uint64)
+    idx = jnp.where(run_end, seg, num_segments)
+    return out.at[idx].set(jnp.where(run_end, scan, INF_U64), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "use_pallas",
+                                             "interpret"))
+def segment_min64(
+    key: jnp.ndarray, seg: jnp.ndarray, *, num_segments: int,
+    use_pallas: bool = False, interpret: bool = True,
+    order: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Per-segment min over packed uint64 keys; unsorted input.
+
+    The fused MOE election calls this ONCE per round (both edge endpoints
+    concatenated), so the Pallas path performs exactly one sort per round.
+    """
+    if not use_pallas:
+        return ref.segment_min64(key, seg, num_segments)
+    if order is None:
+        order = jnp.argsort(seg)
+    return segment_min64_sorted(
+        key[order], seg[order], num_segments=num_segments,
         interpret=interpret)

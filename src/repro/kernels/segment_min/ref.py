@@ -14,6 +14,32 @@ def segment_min(val: jnp.ndarray, seg: jnp.ndarray,
     return out.at[seg].min(val, mode="drop")
 
 
+def segment_min64(key: jnp.ndarray, seg: jnp.ndarray,
+                  num_segments: int) -> jnp.ndarray:
+    """Per-segment min over packed uint64 keys (requires x64 enabled)."""
+    inf = np.uint64(0xFFFFFFFFFFFFFFFF)
+    out = jnp.full((num_segments,), inf, jnp.uint64)
+    return out.at[seg].min(key, mode="drop")
+
+
+def segmented_min2_scan(seg, hi, lo):
+    """Pair-lex segmented min-scan oracle (sorted segments)."""
+    import jax
+
+    def step(carry, x):
+        cs, ch, cl = carry
+        s, h, l = x
+        same = s == cs
+        take = same & ((ch < h) | ((ch == h) & (cl < l)))
+        h = jnp.where(take, ch, h)
+        l = jnp.where(take, cl, l)
+        return (s, h, l), (h, l)
+
+    (_, _, _), (oh, ol) = jax.lax.scan(
+        step, (jnp.int32(-2), INF_U32, INF_U32), (seg, hi, lo))
+    return oh, ol
+
+
 def segmented_min_scan(seg: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
     """Inclusive segmented min-scan oracle (sorted segments), O(M²) lax-free."""
     import jax

@@ -53,6 +53,85 @@ def _scan_kernel(seg_ref, val_ref, out_ref, carry_seg, carry_val, *, block):
     carry_val[0] = val[block - 1]
 
 
+def _scan2_kernel(seg_ref, hi_ref, lo_ref, ohi_ref, olo_ref,
+                  carry_seg, carry_hi, carry_lo, *, block):
+    """Two-lane variant: lexicographic segmented min-scan over (hi, lo) pairs.
+
+    This is the packed-key path — a uint64 key split into uint32 lanes so the
+    scan stays in native VPU word width.  The combine is the pair-lex min
+    ((hi, lo) < (hi', lo')), which is associative, so the same Hillis–Steele
+    recurrence and cross-block carry as the single-lane kernel apply.
+    """
+    i = pl.program_id(0)
+    inf = jnp.uint32(INF_U32)
+    sentinel = jnp.int32(SENTINEL_SEG)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_seg[0] = sentinel
+        carry_hi[0] = inf
+        carry_lo[0] = inf
+
+    seg = seg_ref[...]
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    idx = jax.lax.iota(jnp.int32, block)
+    shift = 1
+    while shift < block:
+        shi = jnp.where(idx >= shift, jnp.roll(hi, shift), inf)
+        slo = jnp.where(idx >= shift, jnp.roll(lo, shift), inf)
+        sseg = jnp.where(idx >= shift, jnp.roll(seg, shift), sentinel)
+        take = (sseg == seg) & ((shi < hi) | ((shi == hi) & (slo < lo)))
+        hi = jnp.where(take, shi, hi)
+        lo = jnp.where(take, slo, lo)
+        shift *= 2
+    # Fold the carry into this block's first run.
+    ch, cl = carry_hi[0], carry_lo[0]
+    take = (seg == carry_seg[0]) & ((ch < hi) | ((ch == hi) & (cl < lo)))
+    hi = jnp.where(take, ch, hi)
+    lo = jnp.where(take, cl, lo)
+    ohi_ref[...] = hi
+    olo_ref[...] = lo
+    carry_seg[0] = seg[block - 1]
+    carry_hi[0] = hi[block - 1]
+    carry_lo[0] = lo[block - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segmented_min2_scan(
+    seg: jnp.ndarray, hi: jnp.ndarray, lo: jnp.ndarray, *, block: int = 1024,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inclusive segmented lex-min scan of ``(hi, lo)`` along sorted ``seg``."""
+    assert seg.shape == hi.shape == lo.shape and seg.ndim == 1
+    m = seg.shape[0]
+    assert m % block == 0, "caller pads to a block multiple"
+    grid = (m // block,)
+    return pl.pallas_call(
+        functools.partial(_scan2_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.uint32),
+            jax.ShapeDtypeStruct((m,), jnp.uint32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.SMEM((1,), jnp.uint32),
+            pltpu.SMEM((1,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(seg, hi, lo)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def segmented_min_scan(
     seg: jnp.ndarray, val: jnp.ndarray, *, block: int = 1024,

@@ -12,14 +12,14 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.sharding.specs import ShardingRules
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_rules(mesh: Mesh) -> ShardingRules:
@@ -38,6 +38,4 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over locally available (possibly forced-host) devices."""
     n = len(jax.devices())
     assert data * model <= n, f"need {data * model} devices, have {n}"
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

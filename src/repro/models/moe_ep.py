@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.models import layers
 from repro.models.config import ModelConfig
 from repro.sharding.specs import _axis_size, current_ctx
@@ -141,11 +142,10 @@ def moe_apply_ep(p, x, cfg: ModelConfig):
                      P(rules.model, None), P()]
         args += [p["shared"]["wi"], p["shared"]["wg"], p["shared"]["wd"],
                  p["shared_gate"]]
-    fn = jax.shard_map(
-        inner, mesh=mesh,
+    fn = compat.shard_map(
+        inner, mesh,
         in_specs=tuple(in_specs),
         out_specs=(P(batch_axes, None, None), P()),
-        check_vma=False,
     )
     out, aux = fn(*args)
     return out, aux

@@ -25,9 +25,10 @@ def run_child(code: str, devices: int = 8) -> str:
 def test_boruvka_multidevice_exact():
     out = run_child("""
 import numpy as np, jax, json
+from repro.compat import make_mesh
 from repro.core import generators, kruskal_ref
 from repro.core.boruvka_dist import minimum_spanning_forest
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("x",))
 g = generators.generate("rmat", 10, seed=3)
 want = kruskal_ref.kruskal(g)
 got, stats = minimum_spanning_forest(g, mesh=mesh)
@@ -40,9 +41,10 @@ print(json.dumps(dict(ok=True, rounds=stats.rounds)))
 def test_ghs_multidevice_exact():
     out = run_child("""
 import numpy as np, jax, json
+from repro.compat import make_mesh
 from repro.core import generators, kruskal_ref
 from repro.core.ghs_message import minimum_spanning_forest
-mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("x",))
 g = generators.generate("rmat", 7, seed=5)
 want = kruskal_ref.kruskal(g)
 got, stats = minimum_spanning_forest(g, mesh=mesh)

@@ -31,6 +31,51 @@ def test_segment_min_unsorted_path():
     assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_segment_min_precomputed_order():
+    """Passing a precomputed argsort(seg) matches the self-sorting path."""
+    from repro.kernels.segment_min import ops, ref
+    m, s = 2000, 33
+    seg = RNG.integers(0, s, m).astype(np.int32)
+    val = RNG.integers(0, 2**32 - 2, m, dtype=np.uint32)
+    order = jnp.argsort(jnp.asarray(seg))
+    got = ops.segment_min(jnp.asarray(val), jnp.asarray(seg),
+                          num_segments=s, use_pallas=True, order=order)
+    want = ref.segment_min(jnp.asarray(val), jnp.asarray(seg), s)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,s", [(512, 3), (2100, 64), (1024, 1)])
+def test_segment_min64_packed_key_sweep(m, s):
+    """Pair-lex Pallas scan over packed uint64 keys == uint64 scatter-min."""
+    from jax.experimental import enable_x64
+    from repro.kernels.segment_min import ops, ref
+    seg = RNG.integers(0, s, m).astype(np.int32)
+    key = ((RNG.integers(0, 2**31, m).astype(np.uint64) << np.uint64(32))
+           | RNG.integers(0, 2**32 - 1, m).astype(np.uint64))
+    with enable_x64():
+        got = ops.segment_min64(jnp.asarray(key), jnp.asarray(seg),
+                                num_segments=s, use_pallas=True)
+        want = ref.segment_min64(jnp.asarray(key), jnp.asarray(seg), s)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segmented_min2_scan_matches_oracle():
+    from jax.experimental import enable_x64
+    from repro.kernels.segment_min import ref
+    from repro.kernels.segment_min.segment_min import segmented_min2_scan
+    m = 1024
+    seg = np.sort(RNG.integers(0, 9, m)).astype(np.int32)
+    hi = RNG.integers(0, 50, m, dtype=np.uint32)     # many hi-lane ties
+    lo = RNG.integers(0, 2**32 - 2, m, dtype=np.uint32)
+    with enable_x64():
+        gh, gl = segmented_min2_scan(jnp.asarray(seg), jnp.asarray(hi),
+                                     jnp.asarray(lo), block=512)
+        wh, wl = ref.segmented_min2_scan(jnp.asarray(seg), jnp.asarray(hi),
+                                         jnp.asarray(lo))
+    assert np.array_equal(np.asarray(gh), np.asarray(wh))
+    assert np.array_equal(np.asarray(gl), np.asarray(wl))
+
+
 # --- edge_hash ---------------------------------------------------------------
 
 @pytest.mark.parametrize("n", [100, 5000])

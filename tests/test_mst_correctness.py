@@ -82,3 +82,68 @@ def test_boruvka_pallas_segmin_path():
     got, _ = minimum_spanning_forest(
         g, method="boruvka", params=GHSParams(use_pallas=True))
     assert np.array_equal(got.edge_mask, want.edge_mask)
+
+
+def test_round_loop_host_vs_device_identical():
+    """The fused device loop and the legacy host loop elect the same forest."""
+    for kind, seed in [("rmat", 13), ("disconnected", 2)]:
+        g = generators.generate(kind, 9, seed=seed)
+        want = kruskal_ref.kruskal(g)
+        host, _ = minimum_spanning_forest(
+            g, method="boruvka", params=GHSParams(round_loop="host"))
+        dev, _ = minimum_spanning_forest(
+            g, method="boruvka", params=GHSParams(round_loop="device"))
+        assert np.array_equal(host.edge_mask, want.edge_mask)
+        assert np.array_equal(dev.edge_mask, want.edge_mask)
+        assert host.total_weight == dev.total_weight
+
+
+def test_compaction_pow2_bit_identical():
+    """On-device pow2 compaction every round leaves the forest bit-identical
+    to the no-compaction run and the Kruskal oracle (multi-round graph)."""
+    g = generators.generate("rmat", 9, seed=7)
+    want = kruskal_ref.kruskal(g)
+    compacted, st_c = minimum_spanning_forest(
+        g, method="boruvka",
+        params=GHSParams(compaction="pow2", check_frequency=1))
+    plain, st_p = minimum_spanning_forest(
+        g, method="boruvka", params=GHSParams(compaction="none"))
+    assert st_p.rounds > 1, "need a multi-round graph for this test"
+    assert st_c.compactions >= 1, "compaction path was not exercised"
+    assert np.array_equal(compacted.edge_mask, want.edge_mask)
+    assert np.array_equal(plain.edge_mask, want.edge_mask)
+    assert compacted.total_weight == plain.total_weight
+    assert compacted.num_components == want.num_components
+
+
+def test_device_loop_host_sync_contract():
+    """≤ 1 host sync per compaction interval (+ the final state fetch)."""
+    g = generators.generate("rmat", 9, seed=11)
+    _, st = minimum_spanning_forest(
+        g, method="boruvka", params=GHSParams(round_loop="device"))
+    assert st.intervals >= 1
+    assert st.host_syncs == st.intervals + 1
+
+
+def test_padding_inert_when_vertex0_isolated():
+    """Regression for the _pad_pow2 fill bug class: padding edges must be
+    self-loops by construction.  Vertex 0 has no incident edges; if padded
+    src/dst slots were filled with vertex 0 and their weight lane ever
+    participated, vertex 0 could be hooked into a fragment."""
+    from repro.core.graph import preprocess
+    rng = np.random.default_rng(3)
+    n = 130                       # not a power of two → padding is exercised
+    m = 500
+    src = rng.integers(1, n, m)   # vertex 0 never appears
+    dst = rng.integers(1, n, m)
+    w = rng.random(m, dtype=np.float32) * 0.98 + 0.01
+    g = preprocess(src, dst, w, n)
+    assert not np.any(g.src == 0) and not np.any(g.dst == 0)
+    want = kruskal_ref.kruskal(g)
+    for params in (GHSParams(round_loop="device", check_frequency=1),
+                   GHSParams(round_loop="host")):
+        got, _ = minimum_spanning_forest(g, method="boruvka", params=params)
+        assert np.array_equal(got.edge_mask, want.edge_mask)
+        assert got.num_components == want.num_components
+        # vertex 0 must remain isolated: no tree edge touches it
+        assert not np.any(got.edge_mask & ((g.src == 0) | (g.dst == 0)))

@@ -1,5 +1,10 @@
 """Property-based invariants of the MST engines (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import preprocess

@@ -5,6 +5,11 @@ reports the average interconnect bytes per superstep across 10 equal
 intervals — reproducing the paper's observation that aggregated messages
 shrink as the run progresses (fragments merge → less traffic), which is why
 it concludes short-message latency/injection-rate becomes the limit.
+
+The per-superstep series comes from the engine's on-device history buffers
+(DESIGN.md §6): collecting it no longer forces a host sync per superstep —
+the device-resident loop still reads back one scalar vector per
+``check_frequency`` interval and the histories ride the final state fetch.
 """
 from __future__ import annotations
 
@@ -33,7 +38,9 @@ bounds = np.linspace(0, n, k + 1).astype(int)
 intervals = [float(per_step[a:b].mean()) if b > a else 0.0
              for a, b in zip(bounds[:-1], bounds[1:])]
 print(json.dumps(dict(supersteps=n, intervals=intervals,
-                      total_remote_msgs=st.sent_remote)))
+                      total_remote_msgs=st.sent_remote,
+                      host_syncs=st.host_syncs,
+                      loop_intervals=st.intervals)))
 """
 
 
@@ -51,7 +58,10 @@ def main(scale: int = 9, shards: int = 4):
         bar = "#" * max(1, int(v / (max(r['intervals']) + 1e-9) * 40))
         print(f"interval {i}: {v:10.0f} B  {bar}")
     print(f"supersteps={r['supersteps']} "
-          f"remote_msgs={r['total_remote_msgs']}")
+          f"remote_msgs={r['total_remote_msgs']} "
+          f"host_syncs={r['host_syncs']} "
+          f"(history via on-device buffers: "
+          f"{r['host_syncs'] / max(r['supersteps'], 1):.2f} syncs/superstep)")
     return r
 
 

@@ -18,6 +18,10 @@ VARIANTS = [
                                     relaxed_test_queue=False)),
     ("final(relaxed)", GHSParams(use_hashing=True, relaxed_test_queue=True,
                                  check_frequency=1)),
+    # Same algorithm, legacy per-superstep driver: the message ledger is
+    # identical; only the host-sync column (and wall time) moves.
+    ("final(host-loop)", GHSParams(use_hashing=True, relaxed_test_queue=True,
+                                   check_frequency=1, round_loop="host")),
 ]
 
 
@@ -25,7 +29,7 @@ def main(scale: int = 9):
     g = generators.generate("rmat", scale, seed=1)
     print(f"# Fig3 — message-processing profile (RMAT-{scale})")
     print(f"{'variant':22s} {'time_s':>8s} {'popped':>9s} {'productive':>10s} "
-          f"{'reproc%':>8s} {'local':>9s} {'remote':>8s}")
+          f"{'reproc%':>8s} {'local':>9s} {'remote':>8s} {'syncs':>6s}")
     rows = []
     for name, params in VARIANTS:
         t0 = time.perf_counter()
@@ -33,9 +37,11 @@ def main(scale: int = 9):
         dt = time.perf_counter() - t0
         reproc = 100 * (1 - st.productive / max(st.processed, 1))
         print(f"{name:22s} {dt:8.2f} {st.processed:9d} {st.productive:10d} "
-              f"{reproc:7.1f}% {st.sent_local:9d} {st.sent_remote:8d}")
+              f"{reproc:7.1f}% {st.sent_local:9d} {st.sent_remote:8d} "
+              f"{st.host_syncs:6d}")
         rows.append(dict(name=name, seconds=dt, processed=st.processed,
-                         productive=st.productive))
+                         productive=st.productive,
+                         host_syncs=st.host_syncs))
     return rows
 
 

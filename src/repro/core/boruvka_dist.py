@@ -39,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import keys as keys_lib
+from repro.core import runtime
 from repro.core import union_find
 from repro.core.graph import PAD_VERTEX, Graph
 from repro.core.kruskal_ref import ForestResult
@@ -75,12 +76,12 @@ def _pow2ceil(x: int) -> int:
 
 
 @dataclasses.dataclass
-class BoruvkaStats:
+class BoruvkaStats(runtime.EngineStats):
+    # host_syncs / intervals inherited from the runtime protocol; for the
+    # legacy host loop, intervals == rounds (one dispatch per round).
     rounds: int = 0
     compactions: int = 0
     edges_scanned: int = 0          # Σ active (padded) edges per round
-    host_syncs: int = 0             # blocking host↔device transfer points
-    intervals: int = 0              # device-loop dispatches (device loop only)
     active_history: tuple = ()      # host loop: global active edges per round;
                                     # device loop: MAX per-shard active count
                                     # per interval (the compaction-cap census)
@@ -190,9 +191,8 @@ def _compact_shard(comp, src, dst, key, *, cap: int):
 def _build_interval_fn(mesh: Optional[Mesh], use_pallas: bool) -> Callable:
     # block0/rounds are traced scalars, so one executable serves every
     # interval length and graph size per (mesh, shapes).  comp/mask are the
-    # mutated state — donate so device buffers are reused in place (CPU does
-    # not implement donation; skip to avoid warnings).
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    # mutated state — donate so device buffers are reused in place.
+    donate = runtime.donation(0, 1)
     if mesh is None:
         fn = partial(_run_interval, axis_name=None, use_pallas=use_pallas)
         return jax.jit(fn, donate_argnums=donate)
@@ -257,33 +257,42 @@ def _device_engine(
         cap_rounds = max_rounds or (n + 2)
         stats = BoruvkaStats()
         history = []
-        cur_block = block0
-        done = False
+        box = dict(cur_block=block0)
 
         fn = _build_interval_fn(mesh, params.use_pallas)
-        while stats.rounds < cap_rounds:
+
+        def dispatch(s):
+            comp_dev, mask_dev, src_d, dst_d, key_d = s
             this_rounds = min(interval, cap_rounds - stats.rounds)
             comp_dev, mask_dev, done_t, r_t, act_t = fn(
                 comp_dev, mask_dev, src_d, dst_d, key_d, block0, this_rounds)
-            # The interval's single host sync: three replicated scalars.
-            done_v, r, n_act = jax.device_get((done_t, r_t, act_t))
-            done = bool(done_v)
-            stats.host_syncs += 1
-            stats.intervals += 1
+            # The interval's scalar summary: three replicated values,
+            # fetched by the runtime with ONE device_get.
+            return (comp_dev, mask_dev, src_d, dst_d, key_d), \
+                (done_t, r_t, act_t)
+
+        def finish(s, vals):
+            done_v, r, n_act = vals
             stats.rounds += int(r)
-            stats.edges_scanned += int(r) * cur_block * num_shards
+            stats.edges_scanned += int(r) * box["cur_block"] * num_shards
             history.append(int(n_act))
-            if done:
-                break
+            if bool(done_v):
+                return s, True
             if params.compaction == "pow2":
                 new_block = max(_pow2ceil(int(n_act)), 8)
-                if new_block < cur_block:   # shrink-only: ≤ log2 recompiles
+                if new_block < box["cur_block"]:   # shrink: ≤ log2 recompiles
                     cfn = _build_compact_fn(mesh, new_block)
+                    comp_dev, mask_dev, src_d, dst_d, key_d = s
                     src_d, dst_d, key_d = cfn(comp_dev, src_d, dst_d, key_d)
-                    cur_block = new_block
+                    s = (comp_dev, mask_dev, src_d, dst_d, key_d)
+                    box["cur_block"] = new_block
                     stats.compactions += 1
-        if not done:
-            raise RuntimeError("Borůvka engine failed to converge")
+            return s, False
+
+        comp_dev, mask_dev, _, _, _ = runtime.interval_loop(
+            (comp_dev, mask_dev, src_d, dst_d, key_d), dispatch, finish,
+            stats=stats, max_intervals=cap_rounds,
+            fail_msg="Borůvka engine failed to converge")
 
         comp_final, mask_full = jax.device_get((comp_dev, mask_dev))
         stats.host_syncs += 1
@@ -292,13 +301,7 @@ def _device_engine(
     # Slot i of the bitmap is canonical edge i (padding slots never set).
     mask = np.asarray(mask_full)[:m].copy()
     ncomp = int(np.unique(comp_final).size)
-    total = float(graph.weight[mask].sum(dtype=np.float64))
-    res = ForestResult(
-        total_weight=total,
-        edge_mask=mask,
-        num_components=ncomp,
-        num_tree_edges=int(mask.sum()),
-    )
+    res = runtime.forest_from_mask(graph, mask, num_components=ncomp)
     res.check_consistent(n)
     stats.active_history = tuple(history)
     return res, stats
@@ -425,21 +428,29 @@ def _host_engine(
         else jnp.asarray(comp)
     )
     src_d, dst_d, wb_d, eid_d = put_edges([src, dst, wbits, eid])
-    # Host mirror of the active edge set (for compaction + winner mapping).
-    active = np.arange(m, dtype=np.int64)
 
     mask = np.zeros(m, dtype=bool)
     history = []
     cap = max_rounds or (n + 2)
+    # Host mirror of the active edge set (for compaction + winner mapping).
+    box = dict(active=np.arange(m, dtype=np.int64))
 
-    for rnd in range(cap):
-        comp_dev, winners, done = round_fn(comp_dev, src_d, dst_d, wb_d, eid_d)
+    def dispatch(s):
+        comp_dev, src_d, dst_d, wb_d, eid_d, _ = s
+        comp_dev, winners, done = round_fn(comp_dev, src_d, dst_d, wb_d,
+                                           eid_d)
+        # The runtime fetches the done flag (the legacy loop's per-round
+        # sync); the winner bitmap readback below is an extra, metered one.
+        return (comp_dev, src_d, dst_d, wb_d, eid_d, winners), done
+
+    def finish(s, done_v):
+        comp_dev, src_d, dst_d, wb_d, eid_d, winners = s
+        rnd = stats.rounds
         stats.rounds += 1
         stats.edges_scanned += int(src_d.shape[0])
-        history.append(len(active))
-        stats.host_syncs += 1          # device→host: done flag
-        if bool(done):
-            break
+        history.append(len(box["active"]))
+        if bool(done_v):
+            return s, True
         stats.host_syncs += 1          # device→host: winner bitmap + ids
         w = np.asarray(winners)
         if w.any():
@@ -452,26 +463,26 @@ def _host_engine(
         ):
             stats.host_syncs += 1      # device→host: fragment labels
             comp_h = np.asarray(comp_dev)
+            active = box["active"]
             keep = comp_h[src[active]] != comp_h[dst[active]]
             if not keep.all():
-                active = active[keep]
+                box["active"] = active = active[keep]
                 stats.compactions += 1
                 src_d, dst_d, wb_d, eid_d = put_edges(
                     [src[active], dst[active],
                      wbits[active], eid[active].astype(np.uint32)]
                 )
-    else:
-        raise RuntimeError("Borůvka engine failed to converge")
+                s = (comp_dev, src_d, dst_d, wb_d, eid_d, winners)
+        return s, False
+
+    comp_dev = runtime.interval_loop(
+        (comp_dev, src_d, dst_d, wb_d, eid_d, None), dispatch, finish,
+        stats=stats, max_intervals=cap,
+        fail_msg="Borůvka engine failed to converge")[0]
 
     comp_final = np.asarray(comp_dev)
     ncomp = int(np.unique(comp_final).size)
-    total = float(graph.weight[mask].sum(dtype=np.float64))
-    res = ForestResult(
-        total_weight=total,
-        edge_mask=mask,
-        num_components=ncomp,
-        num_tree_edges=int(mask.sum()),
-    )
+    res = runtime.forest_from_mask(graph, mask, num_components=ncomp)
     res.check_consistent(n)
     stats.active_history = tuple(history)
     return res, stats
@@ -493,10 +504,6 @@ def minimum_spanning_forest(
     the fused host-sync-free ``lax.while_loop`` engine; ``"host"`` is the
     legacy per-round host loop.  Both produce bit-identical forests.
     """
-    if params.round_loop == "host":
+    if runtime.resolve_round_loop(params.round_loop) == "host":
         return _host_engine(graph, params, mesh, max_rounds)
-    if params.round_loop != "device":
-        raise ValueError(
-            f"unknown round_loop {params.round_loop!r}; "
-            "options: 'device', 'host'")
     return _device_engine(graph, params, mesh, max_rounds)

@@ -15,15 +15,23 @@ Each MPI process of the paper maps to one device shard (shard_map over axis
 "x"); vertices are block-distributed; per-destination aggregation buffers map
 to fixed-capacity buckets exchanged with ONE fused all_to_all per superstep.
 Messages are bit-packed uint32 lanes (C3); incoming messages locate their edge
-via the linear-probe hash (C2) or the linear/binary-search ablations.
+via the linear-probe hash (C2) or the linear/binary-search ablations.  Under
+the hash variant the whole inbox is edge-resolved in ONE vectorized probe
+sweep (the ``kernels/edge_hash`` batched op) before the sequential dispatch
+loop; resolved positions ride a side-lane of the local queue rings.
 
-Everything inside a superstep is jit-compiled; the host loop only checks the
-silence counter (the paper's ``check_finish``/``MPI_Allreduce``).
+The superstep loop itself is device-resident (DESIGN.md §6): a
+``jax.lax.while_loop`` advances up to ``check_frequency`` supersteps per
+dispatch, counting consecutive silent psum checks on device
+(``empty_iter_cnt_to_break``, paper §3.6), so the host synchronizes once per
+interval — not twice per superstep as the legacy driver
+(``params.round_loop == "host"``, retained as the before/after baseline)
+does.  Both drivers run through :mod:`repro.core.runtime`.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 from typing import Optional
 
 import jax
@@ -32,14 +40,16 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.core import runtime
 from repro.core.ghs_state import (
     ACCEPT, BASIC, BRANCH, CHANGE_CORE, CONNECT, FIND, FOUND, INITIATE,
-    REJECT, REJECTED, REPORT, TEST, GHSTopology, ShardState, hash_slot,
-    init_shards, stack_shards,
+    POS_UNRESOLVED, REJECT, REJECTED, REPORT, TEST, GHSTopology, ShardState,
+    hash_slot, init_shards, stack_shards,
 )
 from repro.core.graph import Graph
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
+from repro.kernels.edge_hash import ops as edge_ops
 
 INF32 = jnp.uint32(0xFFFFFFFF)
 _AXIS = "x"
@@ -50,7 +60,7 @@ ERR_LOGIC = 4
 
 
 @dataclasses.dataclass
-class GHSStats:
+class GHSStats(runtime.EngineStats):
     supersteps: int = 0
     processed: int = 0
     productive: int = 0
@@ -68,7 +78,10 @@ class GHSStats:
 # ---------------------------------------------------------------------------
 
 def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
-    """Returns superstep(st) -> (st, activity) traced for one shard."""
+    """Returns superstep(st, do_test, gstep) -> (st, activity, err), traced
+    for one shard.  ``do_test`` (traced bool) selects the Test-queue drain;
+    ``gstep`` (traced i32) is the global superstep index used for the
+    on-device history buffers."""
     S = topo.num_shards
     block = topo.block
     qcap, ocap, xcap = topo.qcap, topo.ocap, topo.xcap
@@ -98,11 +111,16 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
     def msg_type(rows):  # vectorized, for ingest routing
         return (rows[:, 0] & 7) if compressed else rows[:, 0]
 
+    def msg_src_dst(rows):  # vectorized, for the batched edge pre-pass
+        return (rows[:, 1], rows[:, 2]) if compressed else (rows[:, 3],
+                                                            rows[:, 4])
+
     def less(w1, e1, w2, e2):
         return (w1 < w2) | ((w1 == w2) & (e1 < e2))
 
     # --- queue push (masked, branch-free) ---------------------------------
-    def push(st: ShardState, msg, dst, my_shard, pred, is_test):
+    def push(st: ShardState, msg, dst, my_shard, pred, is_test, pos=None):
+        posv = jnp.asarray(POS_UNRESOLVED if pos is None else pos, jnp.int32)
         ds = (dst.astype(jnp.int32) // block)
         local = (ds == my_shard) & pred
         lm = local & ~is_test
@@ -111,10 +129,12 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
         # local main queue
         idx = jnp.where(lm, (st.mq_tail % qcap).astype(jnp.int32), qcap)
         mq = st.mq.at[idx].set(msg, mode="drop")
+        mq_pos = st.mq_pos.at[idx].set(posv, mode="drop")
         mq_tail = st.mq_tail + lm.astype(jnp.int32)
         # local test queue
         idx = jnp.where(lt, (st.tq_tail % qcap).astype(jnp.int32), qcap)
         tq = st.tq.at[idx].set(msg, mode="drop")
+        tq_pos = st.tq_pos.at[idx].set(posv, mode="drop")
         tq_tail = st.tq_tail + lt.astype(jnp.int32)
         # remote ring
         row = jnp.where(rm, ds, S)
@@ -127,7 +147,8 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
             | jnp.any(og_tail - st.og_head > ocap),
             ERR_QUEUE_OVERFLOW, 0).astype(jnp.int32)
         return st._replace(
-            mq=mq, mq_tail=mq_tail, tq=tq, tq_tail=tq_tail,
+            mq=mq, mq_pos=mq_pos, mq_tail=mq_tail,
+            tq=tq, tq_pos=tq_pos, tq_tail=tq_tail,
             og=og, og_tail=og_tail, err=err,
             n_sent_local=st.n_sent_local + local.astype(jnp.int32),
             n_sent_remote=st.n_sent_remote + rm.astype(jnp.int32),
@@ -260,7 +281,7 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
         st = send(st, my_shard, INITIATE, st.ln[lv] + 1, 1, vme, u, kw, ke,
                   merge)
         st = push(st, raw, jnp.asarray(vme, jnp.uint32), my_shard, postpone,
-                  jnp.bool_(False))
+                  jnp.bool_(False), pos=p)
         return st, ~postpone
 
     def h_initiate(st, my_shard, u, lv, p, level, state_bit, fw, fe, raw):
@@ -309,7 +330,7 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
                           lambda s: test_proc(s, my_shard, lv),
                           lambda s: s, st)
         st = push(st, raw, jnp.asarray(vme, jnp.uint32), my_shard, postpone,
-                  jnp.bool_(relaxed))
+                  jnp.bool_(relaxed), pos=p)
         return st, ~postpone
 
     def h_accept(st, my_shard, u, lv, p, level, state_bit, fw, fe, raw):
@@ -356,7 +377,7 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
                 & (st.best_w[lv] == INF32) & (st.best_e[lv] == INF32))
         st = st._replace(halted=st.halted + halt.astype(jnp.int32))
         st = push(st, raw, jnp.asarray(vme, jnp.uint32), my_shard, postpone,
-                  jnp.bool_(False))
+                  jnp.bool_(False), pos=p)
         return st, ~postpone
 
     def h_changecore(st, my_shard, u, lv, p, level, state_bit, fw, fe, raw):
@@ -367,11 +388,13 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
                 h_changecore]
 
     # --- dispatch one message ---------------------------------------------
-    def dispatch(st: ShardState, my_shard, raw):
+    def dispatch(st: ShardState, my_shard, raw, pre):
+        """``pre`` is the batch-resolved CSR position side-lane value: >= 0
+        skips the scalar probe entirely; POS_UNRESOLVED falls back to it."""
         mtype, level, state_bit, src, dst, fw, fe = decode(raw)
         lv = (dst.astype(jnp.int32) - block * my_shard)
         u = src.astype(jnp.int32)
-        p = lookup(st, lv, u)
+        p = jax.lax.cond(pre >= 0, lambda: pre, lambda: lookup(st, lv, u))
         err = st.err | jnp.where(p < 0, ERR_HASH_MISS, 0).astype(jnp.int32)
         st = st._replace(err=err)
         p = jnp.maximum(p, 0)
@@ -395,9 +418,11 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
 
         def body(c):
             st, n = c
-            raw = st.mq[(st.mq_head % qcap).astype(jnp.int32)]
+            slot = (st.mq_head % qcap).astype(jnp.int32)
+            raw = st.mq[slot]
+            pre = st.mq_pos[slot]
             st = st._replace(mq_head=st.mq_head + 1)
-            return dispatch(st, my_shard, raw), n + 1
+            return dispatch(st, my_shard, raw, pre), n + 1
 
         st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
         return st
@@ -411,33 +436,50 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
 
         def body(c):
             st, n = c
-            raw = st.tq[(st.tq_head % qcap).astype(jnp.int32)]
+            slot = (st.tq_head % qcap).astype(jnp.int32)
+            raw = st.tq[slot]
+            pre = st.tq_pos[slot]
             st = st._replace(tq_head=st.tq_head + 1)
-            return dispatch(st, my_shard, raw), n + 1
+            return dispatch(st, my_shard, raw, pre), n + 1
 
         st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
         return st
 
     # --- ingest & flush ------------------------------------------------------
-    def ingest(st: ShardState):
+    def ingest(st: ShardState, my_shard):
         flat = st.inbox.reshape(S * xcap, lanes)
         valid = (jnp.arange(xcap)[None, :]
                  < st.in_cnt[:, None]).reshape(-1)
+        if method == "hash":
+            # Batched pre-pass (C2, vectorized): resolve every incoming
+            # message's edge in one lock-step probe sweep over the shard's
+            # hash table instead of one scalar probe chain per pop.
+            srcs, dsts = msg_src_dst(flat)
+            qlv = dsts.astype(jnp.int32) - block * my_shard
+            pre = edge_ops.resolve_batch(
+                st.h_lv, st.h_u, st.h_pos, qlv, srcs, valid,
+                max_probes=min(tsize, 64))
+            pre = jnp.where(pre >= 0, pre, jnp.int32(POS_UNRESOLVED))
+        else:
+            pre = jnp.full(flat.shape[0], POS_UNRESOLVED, jnp.int32)
         istest = jnp.asarray(relaxed) & (msg_type(flat) == TEST)
         to_main = valid & ~istest
         to_test = valid & istest
         pos = st.mq_tail + jnp.cumsum(to_main.astype(jnp.int32)) - 1
         idx = jnp.where(to_main, (pos % qcap).astype(jnp.int32), qcap)
         mq = st.mq.at[idx].set(flat, mode="drop")
+        mq_pos = st.mq_pos.at[idx].set(pre, mode="drop")
         mq_tail = st.mq_tail + to_main.sum(dtype=jnp.int32)
         pos = st.tq_tail + jnp.cumsum(to_test.astype(jnp.int32)) - 1
         idx = jnp.where(to_test, (pos % qcap).astype(jnp.int32), qcap)
         tq = st.tq.at[idx].set(flat, mode="drop")
+        tq_pos = st.tq_pos.at[idx].set(pre, mode="drop")
         tq_tail = st.tq_tail + to_test.sum(dtype=jnp.int32)
         err = st.err | jnp.where(
             (mq_tail - st.mq_head > qcap) | (tq_tail - st.tq_head > qcap),
             ERR_QUEUE_OVERFLOW, 0).astype(jnp.int32)
-        return st._replace(mq=mq, mq_tail=mq_tail, tq=tq, tq_tail=tq_tail,
+        return st._replace(mq=mq, mq_pos=mq_pos, mq_tail=mq_tail,
+                           tq=tq, tq_pos=tq_pos, tq_tail=tq_tail,
                            in_cnt=jnp.zeros_like(st.in_cnt), err=err)
 
     def flush(st: ShardState):
@@ -452,13 +494,15 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
         return st, msgs, k.astype(jnp.int32)
 
     # --- the superstep -------------------------------------------------------
-    def superstep(st: ShardState, process_test: bool):
+    def superstep(st: ShardState, do_test, gstep):
         my_shard = (jax.lax.axis_index(axis_name).astype(jnp.int32)
                     if axis_name else jnp.int32(0))
-        st = ingest(st)
+        st = ingest(st, my_shard)
         st = process_main(st, my_shard)
-        if process_test and relaxed:
-            st = process_test_q(st, my_shard)
+        if relaxed:
+            st = jax.lax.cond(do_test,
+                              lambda s: process_test_q(s, my_shard),
+                              lambda s: s, st)
         st, msgs, k = flush(st)
         if axis_name is not None and S > 1:
             msgs = jax.lax.all_to_all(msgs, axis_name, 0, 0)
@@ -473,14 +517,169 @@ def make_superstep(topo: GHSTopology, params: GHSParams, axis_name):
         if axis_name is not None:
             activity = jax.lax.psum(activity, axis_name)
             err = jax.lax.psum(err, axis_name)
+        # Per-superstep history, recorded on device (capacity-1 buffers —
+        # i.e. history off — simply drop every write past index 0).
+        st = st._replace(
+            hist_act=st.hist_act.at[gstep].set(activity, mode="drop"),
+            hist_sent=st.hist_sent.at[gstep].set(st.n_sent_remote,
+                                                 mode="drop"))
         return st, activity, err
 
     return superstep
 
 
 # ---------------------------------------------------------------------------
-# Host driver
+# Compile-cached driver builders (runtime layer, DESIGN.md §6)
 # ---------------------------------------------------------------------------
+
+def _state_specs():
+    return ShardState(*[P(_AXIS)] * len(ShardState._fields))
+
+
+def _build_step_fn(topo: GHSTopology, params: GHSParams,
+                   mesh: Optional[Mesh]):
+    """Legacy per-superstep dispatch: (state, do_test, gstep) ->
+    (state, [activity, err]) — ONE fused scalar readback per superstep
+    (the old driver's two blocking ``int()`` fetches, stacked).
+
+    Deliberately NOT compile-cached: the seed driver rebuilt and re-jitted
+    its superstep on every invocation, and this retained path is the
+    before/after baseline for ``bench_superstep_loop.py`` — the runtime
+    layer's compile cache is one of the things being measured."""
+    step_core = make_superstep(topo, params, _AXIS if mesh is not None
+                               else None)
+    donate = runtime.donation(0)
+    if mesh is None:
+        def f(st, do_test, gstep):
+            st, act, err = step_core(st, do_test, gstep)
+            return st, jnp.stack([act, err])
+        return jax.jit(f, donate_argnums=donate)
+
+    def f(stacked, do_test, gstep):
+        st = ShardState(*[a[0] for a in stacked])
+        st, act, err = step_core(st, do_test, gstep)
+        st = ShardState(*[a[None] for a in st])
+        return st, jnp.stack([act, err])
+
+    fn = compat.shard_map(
+        f, mesh,
+        in_specs=(_state_specs(), P(), P()),
+        out_specs=(_state_specs(), P()),
+    )
+    return jax.jit(fn, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=32)
+def _build_interval_fn(topo: GHSTopology, params: GHSParams,
+                       mesh: Optional[Mesh]):
+    """Device-resident superstep loop: (state, step0, silent0, n_steps) ->
+    (state, [steps_run, silent_streak, err]).
+
+    Runs up to ``n_steps`` supersteps in one ``lax.while_loop`` dispatch,
+    breaking early on an error flag or once the consecutive-silent-check
+    streak reaches ``empty_iter_cnt_to_break`` (paper §3.6) — the host
+    reads back one fused length-3 vector per interval."""
+    step_core = make_superstep(topo, params, _AXIS if mesh is not None
+                               else None)
+    check = max(params.check_frequency, 1)
+    empty_needed = max(params.empty_iter_cnt_to_break, 1)
+
+    def interval_core(st, step0, silent0, n_steps):
+        def cond(c):
+            _, i, silent, err = c
+            return (i < n_steps) & (silent < empty_needed) & (err == 0)
+
+        def body(c):
+            st, i, silent, _ = c
+            gstep = step0.astype(jnp.int32) + i
+            do_test = (gstep % check) == (check - 1)
+            st, act, err = step_core(st, do_test, gstep)
+            silent = jnp.where(act == 0, silent + 1, jnp.int32(0))
+            return st, i + 1, silent, err
+
+        st, i, silent, err = jax.lax.while_loop(
+            cond, body,
+            (st, jnp.int32(0), silent0.astype(jnp.int32), jnp.int32(0)))
+        return st, jnp.stack([i, silent, err])
+
+    donate = runtime.donation(0)
+    if mesh is None:
+        return jax.jit(interval_core, donate_argnums=donate)
+
+    def f(stacked, step0, silent0, n_steps):
+        st = ShardState(*[a[0] for a in stacked])
+        st, scal = interval_core(st, step0, silent0, n_steps)
+        return ShardState(*[a[None] for a in st]), scal
+
+    fn = compat.shard_map(
+        f, mesh,
+        in_specs=(_state_specs(), P(), P(), P()),
+        out_specs=(_state_specs(), P()),
+    )
+    return jax.jit(fn, donate_argnums=donate)
+
+
+# ---------------------------------------------------------------------------
+# Drivers (both route through repro.core.runtime.interval_loop)
+# ---------------------------------------------------------------------------
+
+def _raise_on_err(err: int):
+    if err:
+        raise RuntimeError(f"GHS engine error flags: {err:#x}")
+
+
+def _device_driver(state, topo, params, mesh, stats, total_cap: int):
+    """Fused loop: ≤ 1 host sync per ``check_frequency`` supersteps."""
+    fn = _build_interval_fn(topo, params, mesh)
+    interval = max(params.check_frequency, 1)
+    empty_needed = max(params.empty_iter_cnt_to_break, 1)
+    box = dict(steps=0, silent=0)
+
+    def dispatch(st):
+        n_steps = min(interval, total_cap - box["steps"])
+        return fn(st, np.int32(box["steps"]), np.int32(box["silent"]),
+                  np.int32(n_steps))
+
+    def finish(st, vals):
+        i, silent, err = (int(v) for v in np.asarray(vals))
+        _raise_on_err(err)
+        box["steps"] += i
+        box["silent"] = silent
+        return st, silent >= empty_needed
+
+    state = runtime.interval_loop(
+        state, dispatch, finish, stats=stats,
+        max_intervals=-(-total_cap // interval),
+        fail_msg=f"GHS engine did not reach silence in {total_cap} steps")
+    return state, box["steps"]
+
+
+def _host_driver(state, topo, params, mesh, stats, total_cap: int):
+    """Legacy per-superstep loop (``round_loop="host"``), retained as the
+    before/after baseline; its two scalar fetches per superstep are fused
+    into one stacked transfer."""
+    fn = _build_step_fn(topo, params, mesh)
+    check = max(params.check_frequency, 1)
+    empty_needed = max(params.empty_iter_cnt_to_break, 1)
+    box = dict(steps=0, silent=0)
+
+    def dispatch(st):
+        step = box["steps"]
+        do_test = bool(step % check == check - 1)
+        return fn(st, do_test, np.int32(step))
+
+    def finish(st, vals):
+        act, err = (int(v) for v in np.asarray(vals))
+        _raise_on_err(err)
+        box["steps"] += 1
+        box["silent"] = box["silent"] + 1 if act == 0 else 0
+        return st, box["silent"] >= empty_needed
+
+    state = runtime.interval_loop(
+        state, dispatch, finish, stats=stats, max_intervals=total_cap,
+        fail_msg=f"GHS engine did not reach silence in {total_cap} steps")
+    return state, box["steps"]
+
 
 def minimum_spanning_forest(
     graph: Graph,
@@ -489,80 +688,65 @@ def minimum_spanning_forest(
     max_supersteps: Optional[int] = None,
     collect_history: bool = False,
 ) -> tuple[ForestResult, GHSStats]:
-    """Run the faithful GHS engine; returns forest + execution stats."""
+    """Run the faithful GHS engine; returns forest + execution stats.
+
+    ``params.round_loop`` selects the driver: ``"device"`` (default) runs
+    ``check_frequency`` supersteps per host dispatch inside a fused
+    ``lax.while_loop``; ``"host"`` is the legacy one-superstep-per-dispatch
+    loop.  Both produce bit-identical forests.
+    """
+    loop = runtime.resolve_round_loop(params.round_loop)
     S = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
-    topo, shards = init_shards(graph, S, params)
-    step_core = make_superstep(topo, params, _AXIS if mesh is not None else None)
-
-    if mesh is not None:
-        def wrap(flag):
-            def f(stacked):
-                st = ShardState(*[a[0] for a in stacked])
-                st, act, err = step_core(st, flag)
-                st = ShardState(*[a[None] for a in st])
-                return st, act, err
-            return jax.jit(compat.shard_map(
-                f, mesh,
-                in_specs=(ShardState(*[P(_AXIS)] * len(ShardState._fields)),),
-                out_specs=(ShardState(*[P(_AXIS)] * len(ShardState._fields)),
-                           P(), P()),
-            ))
-        state = stack_shards(shards)
-        state = jax.device_put(
-            state, NamedSharding(mesh, P(_AXIS)))
-    else:
-        def wrap(flag):
-            return jax.jit(partial(step_core, process_test=flag))
-        state = jax.tree.map(jnp.asarray, shards[0])
-
-    step_with_test = wrap(True)
-    step_without_test = wrap(False)
-
-    stats = GHSStats()
-    qh, bh = [], []
     n = graph.num_vertices
     cap = max_supersteps or (40 * n + 2000)
-    check = max(params.check_frequency, 1)
-    bytes_per_msg = topo.lanes * 4
-    done = False
-    for step in range(cap):
-        fn = step_with_test if (step % check == check - 1) else step_without_test
-        state, act, err = fn(state)
-        stats.supersteps += 1
-        ierr = int(err)
-        if ierr:
-            raise RuntimeError(f"GHS engine error flags: {ierr:#x}")
-        if collect_history:
-            sr = int(np.sum(np.asarray(state.n_sent_remote)))
-            qh.append(int(act))
-            bh.append(sr * bytes_per_msg)
-        if int(act) == 0:
-            done = True
-            break
-    if not done:
-        raise RuntimeError(f"GHS engine did not reach silence in {cap} steps")
+    empty_needed = max(params.empty_iter_cnt_to_break, 1)
+    total_cap = cap + empty_needed - 1   # silence-confirmation steps are free
+    topo, shards = init_shards(
+        graph, S, params,
+        history_capacity=total_cap if collect_history else 1)
+
+    if mesh is not None:
+        state = jax.device_put(stack_shards(shards),
+                               NamedSharding(mesh, P(_AXIS)))
+    else:
+        state = jax.tree.map(jnp.asarray, shards[0])
+
+    stats = GHSStats()
+    driver = _device_driver if loop == "device" else _host_driver
+    state, steps = driver(state, topo, params, mesh, stats, total_cap)
+    stats.supersteps = steps
+
+    # Final state fetch: forest + counters + histories, one transfer.
+    state_h = jax.device_get(state)
+    stats.host_syncs += 1
 
     # Extract branch edges (union over shards & directions).
-    se = np.asarray(state.se)
-    ceid = np.asarray(state.ceid)
+    se = np.asarray(state_h.se)
+    ceid = np.asarray(state_h.ceid)
     if mesh is None:
         se, ceid = se[None], ceid[None]
     mask = np.zeros(graph.num_edges, dtype=bool)
     for s in range(se.shape[0]):
         sel = se[s] == BRANCH
         mask[ceid[s][sel]] = True
-    total = float(graph.weight[mask].sum(dtype=np.float64))
-    ntree = int(mask.sum())
-    res = ForestResult(
-        total_weight=total, edge_mask=mask,
-        num_components=n - ntree, num_tree_edges=ntree,
-    )
-    stats.processed = int(np.sum(np.asarray(state.n_processed)))
-    stats.productive = int(np.sum(np.asarray(state.n_productive)))
-    stats.sent_remote = int(np.sum(np.asarray(state.n_sent_remote)))
-    stats.sent_local = int(np.sum(np.asarray(state.n_sent_local)))
-    stats.halted_fragments = int(np.sum(np.asarray(state.halted)))
+    res = runtime.forest_from_mask(graph, mask)
+
+    bytes_per_msg = topo.lanes * 4
+    stats.processed = int(np.sum(np.asarray(state_h.n_processed)))
+    stats.productive = int(np.sum(np.asarray(state_h.n_productive)))
+    stats.sent_remote = int(np.sum(np.asarray(state_h.n_sent_remote)))
+    stats.sent_local = int(np.sum(np.asarray(state_h.n_sent_local)))
+    stats.halted_fragments = int(np.sum(np.asarray(state_h.halted)))
     stats.bytes_remote = stats.sent_remote * bytes_per_msg
-    stats.queue_history = tuple(qh)
-    stats.bytes_history = tuple(bh)
+    if collect_history:
+        hist_act = np.asarray(state_h.hist_act)
+        hist_sent = np.asarray(state_h.hist_sent)
+        if mesh is None:
+            hist_act, hist_sent = hist_act[None], hist_sent[None]
+        # activity is psum'd (identical on every shard); sends are per-shard
+        # cumulative counts, summed here to the global cumulative series.
+        stats.queue_history = tuple(
+            int(x) for x in hist_act[0][:steps])
+        stats.bytes_history = tuple(
+            int(x) * bytes_per_msg for x in hist_sent.sum(axis=0)[:steps])
     return res, stats

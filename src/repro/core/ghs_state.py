@@ -28,6 +28,11 @@ from repro.core.params import GHSParams
 
 INF32 = np.uint32(0xFFFFFFFF)
 
+# Sentinel for the local-queue position side-lane: the message's edge has not
+# been batch-resolved yet; dispatch must run the scalar probe (-1 is reserved
+# for a genuine miss, which is an ERR_HASH_MISS).
+POS_UNRESOLVED = np.int32(-2)
+
 # Message types (3 bits).
 CONNECT, INITIATE, TEST, ACCEPT, REJECT, REPORT, CHANGE_CORE = range(7)
 MSG_NAMES = ("Connect", "Initiate", "Test", "Accept", "Reject", "Report",
@@ -76,11 +81,14 @@ class ShardState(NamedTuple):
     h_lv: np.ndarray        # (T,) i32 local vertex key (-1 empty)
     h_u: np.ndarray         # (T,) i32 neighbor key
     h_pos: np.ndarray       # (T,) i32 CSR position
-    # --- queues ---
+    # --- queues (``*_pos`` side-lanes carry the batch-resolved CSR position
+    #     of each queued message, or POS_UNRESOLVED) ---
     mq: np.ndarray          # (qcap, lanes) u32 main queue ring
+    mq_pos: np.ndarray      # (qcap,) i32 resolved CSR position side-lane
     mq_head: np.ndarray     # i64 scalar
     mq_tail: np.ndarray     # i64
     tq: np.ndarray          # (qcap, lanes) u32 test queue ring
+    tq_pos: np.ndarray      # (qcap,) i32
     tq_head: np.ndarray     # i64
     tq_tail: np.ndarray     # i64
     # --- outgoing rings, one per destination shard ---
@@ -97,6 +105,10 @@ class ShardState(NamedTuple):
     n_productive: np.ndarray   # i64 messages that were not postponed
     n_sent_remote: np.ndarray  # i64 messages that crossed shards
     n_sent_local: np.ndarray   # i64 loopback messages
+    # --- on-device per-superstep histories (Fig 3/4; capacity 1 unless the
+    #     driver asked for history — writes out of range are dropped) ---
+    hist_act: np.ndarray    # (hcap,) i32 global activity after superstep k
+    hist_sent: np.ndarray   # (hcap,) i32 cumulative remote sends after step k
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,7 +184,8 @@ def _build_hash_table(lv: np.ndarray, u: np.ndarray, pos: np.ndarray,
 
 
 def init_shards(
-    graph: Graph, num_shards: int, params: GHSParams
+    graph: Graph, num_shards: int, params: GHSParams,
+    history_capacity: int = 1,
 ) -> tuple[GHSTopology, list[ShardState]]:
     """Partition the graph, pre-sort adjacency by weight, build hash tables,
     wake every vertex (spontaneous awakening) and enqueue its Connect(0)."""
@@ -181,6 +194,7 @@ def init_shards(
     wkey = graph.packed_keys()  # uint64 host-side sort key
     block = -(-n // num_shards)
     lanes = 5 if params.compress_messages else 8
+    hcap = max(int(history_capacity), 1)
 
     # per-shard adjacency sizes
     deg = csr.degree()
@@ -189,9 +203,22 @@ def init_shards(
         for s in range(num_shards)
     ]
     eb = max(max(shard_edges), 1)
-    qcap = max(2048, 4 * eb + 4 * block)
-    ocap = qcap
     xcap = max(int(params.max_msg_size), 64)
+    if params.queue_capacity:
+        qcap = int(params.queue_capacity)
+    else:
+        # Ring capacity bound: one superstep appends at most the full
+        # exchange (S·xcap) plus locally generated traffic — dominated by a
+        # single vertex's Initiate fan-out (≤ max degree) and the wake-up
+        # wave (≤ block).  Sized with a 2-4x margin on each term; queue
+        # writes are per-message scatters into the ring, so an oversized
+        # ring (the old 4·eb bound was ~10x too big) directly slows every
+        # push.  Overflow is detected on device (ERR_QUEUE_OVERFLOW) and
+        # raised — never a silent wrong forest; ``queue_capacity``
+        # overrides for adversarial graphs.
+        dmax = int(deg.max()) if deg.size else 0
+        qcap = max(4096, 2 * num_shards * xcap, 4 * dmax, 2 * block)
+    ocap = qcap
     tsize = (max(64, int(eb * params.hash_table_factor) | 1)
              if params.use_hashing else 1)
 
@@ -270,11 +297,19 @@ def init_shards(
 
         mq = np.zeros((qcap, lanes), np.uint32)
         k = len(local_msgs)
+        if k > qcap:
+            raise RuntimeError(
+                f"GHS queue overflow at init: {k} wake-up messages exceed "
+                f"queue_capacity={qcap}")
         if k:
             mq[:k] = np.stack(local_msgs)
         og = np.zeros((num_shards, ocap, lanes), np.uint32)
         og_tail = np.zeros(num_shards, np.int32)
         for ds, msgs in enumerate(msgs_by_dest):
+            if len(msgs) > ocap:
+                raise RuntimeError(
+                    f"GHS queue overflow at init: {len(msgs)} wake-up "
+                    f"messages exceed queue_capacity={ocap}")
             if msgs:
                 og[ds, :len(msgs)] = np.stack(msgs)
                 og_tail[ds] = len(msgs)
@@ -290,8 +325,10 @@ def init_shards(
             test_edge=np.full(block, -1, np.int32),
             indptr=indptr, nbr=nbr, ceid=eid, ewb=ewb, etb=etb, byid=byid,
             se=se, h_lv=h_lv, h_u=h_u, h_pos=h_pos,
-            mq=mq, mq_head=np.int32(0), mq_tail=np.int32(k),
+            mq=mq, mq_pos=np.full(qcap, POS_UNRESOLVED, np.int32),
+            mq_head=np.int32(0), mq_tail=np.int32(k),
             tq=np.zeros((qcap, lanes), np.uint32),
+            tq_pos=np.full(qcap, POS_UNRESOLVED, np.int32),
             tq_head=np.int32(0), tq_tail=np.int32(0),
             og=og, og_head=np.zeros(num_shards, np.int32), og_tail=og_tail,
             inbox=np.zeros((num_shards, xcap, lanes), np.uint32),
@@ -299,6 +336,8 @@ def init_shards(
             err=np.int32(0), halted=np.int32(0),
             n_processed=np.int32(0), n_productive=np.int32(0),
             n_sent_remote=np.int32(0), n_sent_local=np.int32(0),
+            hist_act=np.zeros(hcap, np.int32),
+            hist_sent=np.zeros(hcap, np.int32),
         ))
     return topo, shards
 

@@ -1,16 +1,26 @@
-"""Public MST API — unified front-end over the two engines."""
+"""Public MST API — thin façade over the two engines.
+
+Engine drivers, stats protocol, and the ``round_loop`` knob live in
+:mod:`repro.core.runtime` (DESIGN.md §6); this module only selects the
+engine.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 from jax.sharding import Mesh
 
-from repro.core import boruvka_dist, ghs_message
+from repro.core import boruvka_dist, ghs_message, runtime
 from repro.core.graph import Graph
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 
 METHODS = ("ghs", "boruvka")
+
+_ENGINES = {
+    "ghs": ghs_message.minimum_spanning_forest,
+    "boruvka": boruvka_dist.minimum_spanning_forest,
+}
 
 
 def minimum_spanning_forest(
@@ -19,23 +29,23 @@ def minimum_spanning_forest(
     params: GHSParams = DEFAULT_PARAMS,
     mesh: Optional[Mesh] = None,
     **kw,
-) -> tuple[ForestResult, object]:
+) -> tuple[ForestResult, runtime.EngineStats]:
     """Compute the minimum spanning forest of ``graph``.
 
     method='ghs'     — paper-faithful message-driven GHS (the reproduction).
-    method='boruvka' — TPU-native synchronous engine (beyond-paper optimized);
-                       ``params.round_loop`` picks the device-resident fused
-                       loop (default) or the legacy host-driven loop.
+    method='boruvka' — TPU-native synchronous engine (beyond-paper optimized).
 
-    Both return (ForestResult, stats); the forest is bit-identical between
-    engines and loop drivers (and to the Kruskal oracle) because all of them
-    elect edges under the same packed (weight, edge-id) total order of
-    :mod:`repro.core.keys`.
+    For BOTH engines ``params.round_loop`` picks the device-resident fused
+    loop (default — at most one host sync per ``check_frequency`` interval)
+    or the legacy host-driven loop.  Both return ``(ForestResult, stats)``
+    with ``stats`` deriving from :class:`repro.core.runtime.EngineStats`;
+    the forest is bit-identical between engines and loop drivers (and to
+    the Kruskal oracle) because all of them elect edges under the same
+    packed (weight, edge-id) total order of :mod:`repro.core.keys`.
     """
-    if method == "ghs":
-        return ghs_message.minimum_spanning_forest(
-            graph, params=params, mesh=mesh, **kw)
-    if method == "boruvka":
-        return boruvka_dist.minimum_spanning_forest(
-            graph, params=params, mesh=mesh, **kw)
-    raise ValueError(f"unknown method {method!r}; options: {METHODS}")
+    try:
+        engine = _ENGINES[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {method!r}; options: {METHODS}") from None
+    return engine(graph, params=params, mesh=mesh, **kw)

@@ -17,12 +17,19 @@ class GHSParams:
       * ``check_frequency``    — supersteps between drains of the deferred
         ``Test`` queue (faithful engine) / rounds between edge compactions
         (optimized engine).  This is the paper's key contribution (C1).
-      * ``empty_iter_cnt_to_break`` — supersteps between global silence checks
-        (termination allreduce).  The BSP engine can afford to check every
-        superstep (the psum rides the existing collective), but we keep the
-        knob for fidelity.
+      * ``empty_iter_cnt_to_break`` — how many CONSECUTIVE silent activity
+        checks (global queue+in-flight census == 0) must be observed before
+        the engine halts (paper §3.6).  Each superstep's psum silence check
+        counts as one observation; any activity resets the streak.  Values
+        > 1 add exactly ``empty_iter_cnt_to_break - 1`` confirmation
+        supersteps after first silence and never change the forest (a
+        silent engine has no in-flight messages left to revive it).
       * ``hash_table_factor``  — hash table slots per local edge (paper:
         5 * 11 / 13 ≈ 4.23).
+      * ``queue_capacity``     — override for the faithful engine's message
+        ring capacity (default: sized from the shard's adjacency so
+        overflow is impossible on well-formed runs).  Small values exercise
+        the ``ERR_QUEUE_OVERFLOW`` error path deterministically.
     """
 
     max_msg_size: int = 4096
@@ -30,16 +37,19 @@ class GHSParams:
     check_frequency: int = 5
     empty_iter_cnt_to_break: int = 1
     hash_table_factor: float = 5 * 11 / 13
+    queue_capacity: int = 0           # 0 = auto-size from the shard adjacency
     # Optimization toggles (Fig 2 ablation ladder).
     use_hashing: bool = True          # C2: hash edge lookup vs linear search
     relaxed_test_queue: bool = True   # C1: separate Test queue
     compress_messages: bool = True    # C3: bit-packed message words
-    # Optimized-engine extras (beyond paper).
+    # Engine-runtime extras (beyond paper) — shared by BOTH engines.
     compaction: str = "pow2"          # 'none' | 'pow2' lazy edge compaction
     use_pallas: bool = False          # route segment-min through the Pallas kernel
     round_loop: str = "device"        # 'device': fused lax.while_loop engine
-                                      #   (≤ 1 host sync per compaction interval)
-                                      # 'host': legacy per-round host loop
+                                      #   (≤ 1 host sync per check_frequency
+                                      #   interval, both engines)
+                                      # 'host': legacy per-round / per-superstep
+                                      #   host loop
 
 
 DEFAULT_PARAMS = GHSParams()

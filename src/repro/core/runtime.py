@@ -1,0 +1,129 @@
+"""Shared engine runtime — the interval-driven driver both MST engines use.
+
+DESIGN.md §6.  Both engines (the paper-faithful message GHS and the
+synchronous Borůvka reformulation) follow the same execution shape once
+their inner loops are device-resident:
+
+    compile a fused *interval* function   (lax.while_loop over N steps)
+    loop:  dispatch one interval          (state stays on device)
+           read back ONE fused scalar vector
+           host decides: done? error? re-bucket/compact?
+
+This module owns the pieces that are engine-independent:
+
+* :func:`interval_loop` — the host driver harness.  Per interval it performs
+  exactly one blocking device→host transfer (``jax.device_get`` on the
+  dispatch's scalar outputs) and one ``host_syncs``/``intervals`` ledger
+  update, then hands the scalars to an engine-specific ``finish`` hook that
+  interprets them (raise on error flags, count rounds/supersteps, trigger
+  compaction) and decides termination.
+* :class:`EngineStats` — the unified stats protocol: every engine's stats
+  object derives from it so benchmarks can meter host syncs and interval
+  counts uniformly.
+* :func:`donation` — ``donate_argnums`` selection: state buffers are donated
+  for in-place reuse on backends that implement donation (CPU does not;
+  donating there only emits warnings).
+* :func:`forest_from_mask` — the shared forest-extraction path from a
+  canonical edge bitmap to a :class:`ForestResult`.
+* :func:`resolve_round_loop` — validation of the ``params.round_loop`` knob
+  shared by both engines (``"device"`` fused loop / ``"host"`` legacy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.kruskal_ref import ForestResult
+
+ROUND_LOOPS = ("device", "host")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Host↔device traffic ledger common to every engine driver.
+
+    ``host_syncs`` counts blocking transfer points (the driver adds one per
+    interval; engine hooks add any extras they perform, e.g. the final state
+    fetch or a legacy path's winner-bitmap readback).  ``intervals`` counts
+    driver dispatches — for a device-resident loop that is one per
+    ``check_frequency`` steps; for a legacy host loop it equals the number
+    of rounds/supersteps.
+    """
+
+    host_syncs: int = 0
+    intervals: int = 0
+
+
+def donation(*argnums: int) -> Tuple[int, ...]:
+    """``donate_argnums`` for mutated state buffers, or () on backends
+    (CPU) that do not implement donation and would only warn."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+def interval_loop(
+    state: Any,
+    dispatch: Callable[[Any], Tuple[Any, Any]],
+    finish: Callable[[Any, Any], Tuple[Any, bool]],
+    *,
+    stats: EngineStats,
+    max_intervals: int,
+    fail_msg: str,
+) -> Any:
+    """Drive a device-resident engine to completion.
+
+    ``dispatch(state) -> (state, scalars)`` runs one fused interval on
+    device and returns the new state plus the interval's scalar summary
+    (any pytree of device scalars — fetched with ONE ``device_get``).
+    ``finish(state, host_scalars) -> (state, done)`` interprets the fetched
+    values: it raises on error flags, updates engine counters, may mutate
+    the state (e.g. compaction re-dispatch), and reports termination.
+
+    Raises ``RuntimeError(fail_msg)`` if ``max_intervals`` elapse without
+    ``finish`` signalling done.
+    """
+    for _ in range(max_intervals):
+        state, scalars = dispatch(state)
+        vals = jax.device_get(scalars)  # the interval's single host sync
+        stats.host_syncs += 1
+        stats.intervals += 1
+        state, done = finish(state, vals)
+        if done:
+            return state
+    raise RuntimeError(fail_msg)
+
+
+def forest_from_mask(
+    graph: Graph,
+    mask: np.ndarray,
+    *,
+    num_components: Optional[int] = None,
+) -> ForestResult:
+    """Build a :class:`ForestResult` from a canonical edge bitmap.
+
+    ``num_components`` defaults to ``num_vertices - num_tree_edges`` (exact
+    for any forest); engines that track fragment labels may pass the label
+    census instead.
+    """
+    mask = np.asarray(mask, dtype=bool)
+    ntree = int(mask.sum())
+    total = float(graph.weight[mask].sum(dtype=np.float64))
+    if num_components is None:
+        num_components = graph.num_vertices - ntree
+    return ForestResult(
+        total_weight=total,
+        edge_mask=mask,
+        num_components=num_components,
+        num_tree_edges=ntree,
+    )
+
+
+def resolve_round_loop(round_loop: str) -> str:
+    """Validate the shared ``params.round_loop`` knob."""
+    if round_loop not in ROUND_LOOPS:
+        raise ValueError(
+            f"unknown round_loop {round_loop!r}; options: {ROUND_LOOPS}")
+    return round_loop

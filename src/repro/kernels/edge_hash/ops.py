@@ -23,3 +23,19 @@ def lookup(table, q_lv, q_u, *, use_pallas: bool = True,
     if use_pallas:
         return hash_lookup(h_lv, h_u, h_pos, q_lv, q_u, interpret=interpret)
     return ref.hash_lookup(h_lv, h_u, h_pos, q_lv, q_u)
+
+
+def resolve_batch(h_lv, h_u, h_pos, q_lv, q_u, valid, *,
+                  max_probes: int = 64):
+    """Trace-safe batched (receiver, sender) → CSR-position pre-pass.
+
+    Used inside the faithful GHS engine's superstep: resolves every valid
+    incoming-message lane against the shard's edge hash table in one
+    vectorized early-exit probe sweep.  Invalid lanes and lanes still
+    unresolved after ``max_probes`` rounds return -1 — the dispatch loop
+    falls back to the scalar probe for those, so the pre-pass can never
+    change results, only skip work.
+    """
+    return ref.probe(h_lv, h_u, h_pos,
+                     q_lv.astype(jnp.int32), q_u.astype(jnp.int32),
+                     done0=~valid, max_probes=max_probes)

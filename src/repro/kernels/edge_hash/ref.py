@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for the edge_hash lookup kernel."""
+"""Pure-jnp oracle for the edge_hash lookup kernel.
+
+The probe core is shared with the batched inbox resolver
+(:func:`repro.kernels.edge_hash.ops.resolve_batch`) that the faithful GHS
+engine uses to edge-resolve a whole superstep's incoming messages in one
+vectorized sweep.  Unlike the Pallas kernel's fixed-trip ``fori_loop``, the
+core early-exits once every lane has frozen (hit or empty slot), so a
+near-empty inbox costs only the one-or-two probe rounds it actually needs.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,23 +16,40 @@ import numpy as np
 from repro.core.ghs_state import HASH_K1, HASH_K2
 
 
-def hash_lookup(h_lv, h_u, h_pos, q_lv, q_u, max_probes: int = 64):
+def probe(h_lv, h_u, h_pos, q_lv, q_u, *, done0=None, max_probes: int = 64):
+    """Linear-probe all query lanes in lock-step; -1 where unresolved.
+
+    ``done0`` marks lanes that should not probe at all (e.g. invalid inbox
+    slots); they return -1.  Lanes freeze on hit or empty slot; the loop
+    exits as soon as every lane is frozen, or after ``max_probes`` rounds
+    (callers treat a still-unresolved lane as "fall back to the scalar
+    probe", never as a miss).
+    """
     tsize = h_lv.shape[0]
     mixed = (q_lv.astype(jnp.uint32) * HASH_K1) ^ (q_u.astype(jnp.uint32)
                                                    * HASH_K2)
     idx = (mixed % np.uint32(tsize)).astype(jnp.int32)
+    if done0 is None:
+        done0 = jnp.zeros(q_lv.shape, jnp.bool_)
 
-    def probe(_, carry):
-        idx, done, pos = carry
+    def cond(carry):
+        _, done, _, steps = carry
+        return jnp.any(~done) & (steps < max_probes)
+
+    def body(carry):
+        idx, done, pos, steps = carry
         hit = (h_lv[idx] == q_lv) & (h_u[idx] == q_u)
         empty = h_pos[idx] < 0
         pos = jnp.where(~done & hit, h_pos[idx], pos)
         done = done | hit | empty
         idx = jnp.where(done, idx, (idx + 1) % np.int32(tsize))
-        return idx, done, pos
+        return idx, done, pos, steps + 1
 
-    _, _, pos = jax.lax.fori_loop(
-        0, max_probes, probe,
-        (idx, jnp.zeros(q_lv.shape, jnp.bool_),
-         jnp.full(q_lv.shape, -1, jnp.int32)))
+    _, _, pos, _ = jax.lax.while_loop(
+        cond, body,
+        (idx, done0, jnp.full(q_lv.shape, -1, jnp.int32), jnp.int32(0)))
     return pos
+
+
+def hash_lookup(h_lv, h_u, h_pos, q_lv, q_u, max_probes: int = 64):
+    return probe(h_lv, h_u, h_pos, q_lv, q_u, max_probes=max_probes)

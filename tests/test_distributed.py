@@ -56,6 +56,85 @@ print(json.dumps(dict(ok=True, steps=stats.supersteps,
     assert rec["ok"] and rec["remote"] > 0   # real cross-shard traffic
 
 
+def test_ghs_runtime_ablation_matrix_1_2_4_shards():
+    """Engine equivalence under the shared runtime: relaxed vs FIFO Test
+    queue, compressed vs uncompressed messages, and hash/linear/binary
+    lookup all produce bit-identical forests across 1/2/4 shards."""
+    out = run_child("""
+import numpy as np, json
+from repro.compat import make_mesh
+from repro.core import generators, kruskal_ref
+from repro.core.ghs_message import minimum_spanning_forest
+from repro.core.params import GHSParams
+
+ABLATIONS = [
+    ("fifo",     GHSParams(relaxed_test_queue=False)),
+    ("relaxed",  GHSParams(relaxed_test_queue=True)),
+    ("raw",      GHSParams(compress_messages=False)),
+    ("packed",   GHSParams(compress_messages=True)),
+    ("hash",     GHSParams(use_hashing=True)),
+    ("linear",   GHSParams(use_hashing=False)),
+    ("binary",   GHSParams(use_hashing=False, hash_table_factor=-1.0)),
+]
+g = generators.generate("rmat", 6, seed=9)
+want = kruskal_ref.kruskal(g)
+rows = []
+for shards in (1, 2, 4):
+    mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+    for name, params in ABLATIONS:
+        got, st = minimum_spanning_forest(g, params=params, mesh=mesh)
+        rows.append(dict(
+            shards=shards, name=name,
+            ok=bool(np.array_equal(got.edge_mask, want.edge_mask)),
+            sync_ok=bool(st.host_syncs == st.intervals + 1)))
+print(json.dumps(rows))
+""", devices=4)
+    rows = json.loads(out.strip().splitlines()[-1])
+    assert len(rows) == 21
+    bad = [r for r in rows if not (r["ok"] and r["sync_ok"])]
+    assert not bad, bad
+
+
+def test_ghs_queue_overflow_raises():
+    """ERR_QUEUE_OVERFLOW surfaces as a RuntimeError on both drivers —
+    never a silently wrong forest.  A cross-shard star floods shard 0's
+    rings when the capacity override is small; the same graph converges
+    bit-identically at the default (auto-sized) capacity."""
+    out = run_child("""
+import numpy as np, json
+from repro.compat import make_mesh
+from repro.core import kruskal_ref
+from repro.core.graph import preprocess
+from repro.core.ghs_message import minimum_spanning_forest
+from repro.core.params import GHSParams
+
+mesh = make_mesh((2,), ("x",))
+n = 256
+src = np.zeros(n - 1, np.int64)
+dst = np.arange(1, n, dtype=np.int64)
+rng = np.random.default_rng(0)
+w = rng.random(n - 1, dtype=np.float32) * 0.9 + 0.05
+g = preprocess(src, dst, w, n)
+res = dict(raised={}, ok={})
+for loop in ("device", "host"):
+    try:
+        minimum_spanning_forest(
+            g, mesh=mesh,
+            params=GHSParams(queue_capacity=160, round_loop=loop))
+        res["raised"][loop] = False
+    except RuntimeError as e:
+        res["raised"][loop] = "error flags" in str(e)
+    got, _ = minimum_spanning_forest(
+        g, mesh=mesh, params=GHSParams(round_loop=loop))
+    res["ok"][loop] = bool(np.array_equal(
+        got.edge_mask, kruskal_ref.kruskal(g).edge_mask))
+print(json.dumps(res))
+""", devices=2)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["raised"] == {"device": True, "host": True}
+    assert rec["ok"] == {"device": True, "host": True}
+
+
 def test_ep_moe_matches_ragged_when_dropfree():
     run_child("""
 import jax, jax.numpy as jnp

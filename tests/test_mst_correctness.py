@@ -125,6 +125,63 @@ def test_device_loop_host_sync_contract():
     assert st.host_syncs == st.intervals + 1
 
 
+def test_ghs_round_loop_host_vs_device_identical():
+    """The fused device superstep loop and the legacy per-superstep driver
+    run the same supersteps and elect the same forest; the device loop's
+    host syncs scale with check_frequency intervals, not supersteps."""
+    for kind, seed in [("rmat", 13), ("disconnected", 2)]:
+        g = generators.generate(kind, 7, seed=seed)
+        want = kruskal_ref.kruskal(g)
+        host, sh = minimum_spanning_forest(
+            g, method="ghs", params=GHSParams(round_loop="host"))
+        dev, sd = minimum_spanning_forest(
+            g, method="ghs", params=GHSParams(round_loop="device"))
+        assert np.array_equal(host.edge_mask, want.edge_mask)
+        assert np.array_equal(dev.edge_mask, want.edge_mask)
+        assert sd.supersteps == sh.supersteps
+        # runtime protocol: one fused readback per interval + final fetch
+        assert sd.host_syncs == sd.intervals + 1
+        assert sh.host_syncs == sh.supersteps + 1
+        check = max(GHSParams().check_frequency, 1)
+        assert sd.intervals <= -(-sd.supersteps // check) + 1
+        assert sd.intervals < sh.intervals
+
+
+def test_ghs_empty_iter_cnt_to_break_semantics():
+    """Paper §3.6: silence must persist ``empty_iter_cnt_to_break``
+    consecutive checks before halting — a non-default value adds exactly
+    that many confirmation supersteps and never changes the forest."""
+    g = generators.generate("rmat", 7, seed=9)
+    want = kruskal_ref.kruskal(g)
+    for loop in ("device", "host"):
+        base, s1 = minimum_spanning_forest(
+            g, method="ghs",
+            params=GHSParams(round_loop=loop, empty_iter_cnt_to_break=1))
+        conf, s4 = minimum_spanning_forest(
+            g, method="ghs",
+            params=GHSParams(round_loop=loop, empty_iter_cnt_to_break=4))
+        assert s4.supersteps == s1.supersteps + 3, loop
+        assert np.array_equal(base.edge_mask, want.edge_mask)
+        assert np.array_equal(conf.edge_mask, want.edge_mask)
+
+
+def test_ghs_history_device_matches_host():
+    """The on-device per-superstep history buffers reproduce the legacy
+    driver's per-step queue/bytes series exactly (Fig 3/4 inputs)."""
+    g = generators.generate("rmat", 7, seed=5)
+    _, sd = minimum_spanning_forest(
+        g, method="ghs", params=GHSParams(round_loop="device"),
+        collect_history=True)
+    _, sh = minimum_spanning_forest(
+        g, method="ghs", params=GHSParams(round_loop="host"),
+        collect_history=True)
+    assert len(sd.queue_history) == sd.supersteps
+    assert sd.queue_history == sh.queue_history
+    assert sd.bytes_history == sh.bytes_history
+    assert sd.queue_history[-1] == 0          # terminal silence
+    assert sd.bytes_history[-1] == sd.bytes_remote
+
+
 def test_padding_inert_when_vertex0_isolated():
     """Regression for the _pad_pow2 fill bug class: padding edges must be
     self-loops by construction.  Vertex 0 has no incident edges; if padded

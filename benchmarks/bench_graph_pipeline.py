@@ -1,0 +1,168 @@
+"""Graph-pipeline benchmark: host numpy build vs the device-resident
+pipeline, end-to-end (build + solve) wall time + host syncs (DESIGN.md §7).
+
+The *host pipeline* is the historical path: numpy counter-based generation
++ ``np.lexsort`` §3.1 preprocessing on host, then the engine pads and
+uploads the edge arrays.  The *device pipeline* generates, preprocesses,
+and shards the same graph entirely on device (``repro.core.pipeline``) and
+hands :class:`DeviceEdges` straight to the Borůvka engine — its only build
+sync is the deduped-edge-count scalar.  Both paths are byte-identical by
+construction (asserted per run), so the speedup is pure pipeline, not a
+different graph.
+
+Also sweeps 1/2/4/8 shard_map shards at the same scale (subprocesses with
+forced host devices) and checks every partitioner (block/hashed/balanced)
+stays bit-identical to the numpy Borůvka oracle.
+
+Emits ``BENCH_graph_pipeline.json`` (or ``--out``).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_graph_pipeline.py --scale 14
+    PYTHONPATH=src python benchmarks/bench_graph_pipeline.py \
+        --scale 10 --repeats 1 --shards 1,2      # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+_SWEEP_CHILD = r"""
+import json, sys, time
+import numpy as np
+from repro.compat import make_mesh
+from repro.core import kruskal_ref, pipeline
+from repro.core.mst_api import minimum_spanning_forest
+from repro.core.params import GHSParams
+from repro.core.pipeline import GraphSpec
+
+kind, scale, shards, repeats = (sys.argv[1], int(sys.argv[2]),
+                                int(sys.argv[3]), int(sys.argv[4]))
+mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+spec = GraphSpec(kind, scale, seed=1)
+
+
+def best(fn, *a, **kw):
+    out, t = None, float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*a, **kw)
+        t = min(t, time.perf_counter() - t0)
+    return out, t
+
+
+host_graph, t_host_build = best(pipeline.build_host, spec)
+want = kruskal_ref.boruvka_numpy(host_graph)
+
+pipeline.build(spec, mesh=mesh)                      # compile warm-up
+dev, t_dev_build = best(pipeline.build, spec, mesh=mesh)
+byte_identical = bool(
+    np.array_equal(host_graph.src, dev.to_graph().src)
+    and np.array_equal(host_graph.dst, dev.to_graph().dst)
+    and np.array_equal(host_graph.weight.view(np.uint32),
+                       dev.to_graph().weight.view(np.uint32)))
+
+# Engine warm-up for BOTH input shapes: the host pad (pow2 >= deduped m)
+# and the pipeline capacity (pow2 >= raw samples) can compile different
+# executables, and --repeats 1 cannot amortize a cold compile.
+minimum_spanning_forest(host_graph, mesh=mesh)
+minimum_spanning_forest(dev, mesh=mesh)
+(res_h, st_h), t_host_solve = best(
+    minimum_spanning_forest, host_graph, mesh=mesh)
+(res_d, st_d), t_dev_solve = best(minimum_spanning_forest, dev, mesh=mesh)
+
+row = dict(
+    kind=kind, scale=scale, shards=shards,
+    num_edges=host_graph.num_edges,
+    byte_identical=byte_identical,
+    host=dict(build_s=t_host_build, solve_s=t_host_solve,
+              total_s=t_host_build + t_host_solve,
+              build_syncs=0, solve_syncs=st_h.host_syncs,
+              oracle_exact=bool(np.array_equal(res_h.edge_mask,
+                                               want.edge_mask))),
+    device=dict(build_s=t_dev_build, solve_s=t_dev_solve,
+                total_s=t_dev_build + t_dev_solve,
+                build_syncs=1, solve_syncs=st_d.host_syncs,
+                oracle_exact=bool(np.array_equal(res_d.edge_mask,
+                                                 want.edge_mask))),
+)
+row["build_speedup"] = t_host_build / max(t_dev_build, 1e-9)
+row["end_to_end_speedup"] = row["host"]["total_s"] / row["device"]["total_s"]
+
+partitioners = {}
+for part in ("block", "hashed", "balanced"):
+    got, _ = minimum_spanning_forest(
+        host_graph, mesh=mesh, params=GHSParams(partitioner=part))
+    partitioners[part] = bool(np.array_equal(got.edge_mask, want.edge_mask))
+row["partitioners_exact"] = partitioners
+print(json.dumps(row))
+"""
+
+
+def run_shard(kind: str, scale: int, shards: int, repeats: int) -> dict:
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={shards}",
+        PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SWEEP_CHILD, kind, str(scale), str(shards),
+         str(repeats)],
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--kind", default="rmat")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--shards", default="1,2,4,8",
+                    help="comma-separated shard counts")
+    ap.add_argument("--out", default="BENCH_graph_pipeline.json")
+    args = ap.parse_args(argv)
+
+    shard_counts = [int(s) for s in args.shards.split(",") if s]
+    rows = []
+    print(f"# graph-pipeline bench — {args.kind} scale {args.scale}")
+    print(f"{'shards':>6s} {'host_build':>11s} {'dev_build':>10s} "
+          f"{'host_e2e':>9s} {'dev_e2e':>8s} {'build_x':>8s} {'e2e_x':>6s} "
+          f"{'bytes==':>7s}")
+    for p in shard_counts:
+        row = run_shard(args.kind, args.scale, p, args.repeats)
+        rows.append(row)
+        h, d = row["host"], row["device"]
+        print(f"{p:6d} {h['build_s']:11.3f} {d['build_s']:10.3f} "
+              f"{h['total_s']:9.3f} {d['total_s']:8.3f} "
+              f"{row['build_speedup']:8.2f} {row['end_to_end_speedup']:6.2f} "
+              f"{str(row['byte_identical']):>7s}")
+
+    bad = [r for r in rows
+           if not (r["byte_identical"] and r["host"]["oracle_exact"]
+                   and r["device"]["oracle_exact"]
+                   and all(r["partitioners_exact"].values()))]
+    print(f"# {len(rows)} shard configs, {len(rows) - len(bad)} fully "
+          f"byte-identical + oracle-exact (all partitioners)")
+    for r in bad:
+        print("  MISMATCH:", r)
+
+    record = dict(
+        kind=args.kind, scale=args.scale, repeats=args.repeats,
+        rows=rows,
+        all_ok=not bad,
+        end_to_end_speedup_1shard=rows[0]["end_to_end_speedup"] if rows
+        else None,
+    )
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}")
+    if bad:
+        raise SystemExit("graph-pipeline identity sweep failed")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,13 @@ from repro.core.generators import GENERATORS, generate
 from repro.core.kruskal_ref import ForestResult, boruvka_numpy, kruskal
 from repro.core.mst_api import minimum_spanning_forest
 from repro.core.params import DEFAULT_PARAMS, GHSParams
+from repro.core.partition import PARTITIONERS, get_partitioner
+from repro.core.pipeline import DeviceEdges, GraphSpec, build, build_host
 
 __all__ = [
     "Graph", "build_csr", "preprocess", "GENERATORS", "generate",
     "ForestResult", "boruvka_numpy", "kruskal", "minimum_spanning_forest",
     "DEFAULT_PARAMS", "GHSParams",
+    "PARTITIONERS", "get_partitioner",
+    "DeviceEdges", "GraphSpec", "build", "build_host",
 ]

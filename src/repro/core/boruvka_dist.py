@@ -39,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import keys as keys_lib
+from repro.core import partition as partition_lib
 from repro.core import runtime
 from repro.core import union_find
 from repro.core.graph import PAD_VERTEX, Graph
@@ -68,11 +69,8 @@ def _pad_pow2(arrs, multiple: int, fill_vals):
     ]
 
 
-def _pow2ceil(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
+# Power-of-two bucket sizing shared with the layout builder.
+_pow2ceil = partition_lib.pow2ceil
 
 
 @dataclasses.dataclass
@@ -97,7 +95,7 @@ def _run_interval(
     src: jnp.ndarray,
     dst: jnp.ndarray,
     key: jnp.ndarray,
-    block0: jnp.ndarray,
+    slot: jnp.ndarray,
     rounds: jnp.ndarray,
     *,
     axis_name: Optional[str],
@@ -106,18 +104,17 @@ def _run_interval(
     """Advance up to ``rounds`` Borůvka rounds entirely on device.
 
     State per shard: replicated fragment labels ``comp``, the per-slot tree
-    bitmap ``mask`` (aligned with the ORIGINAL block layout — slot i on shard
-    s is canonical edge ``s*block0 + i``), and the (possibly compacted) local
-    edge arrays.  Returns the new state plus a replicated (done, rounds-run,
-    max local active count) triple — the ONLY values the host ever reads.
+    bitmap ``mask`` (frozen in the load-time layout of the partitioner —
+    slot i on shard s is canonical edge ``layout.eid[s*block + i]``), and
+    the (possibly compacted) local edge arrays.  Each edge carries its own
+    load-time ``slot`` index, so winner recording is a local scatter under
+    ANY partition and survives compaction.  Returns the new state plus a
+    replicated (done, rounds-run, max local active count) triple — the ONLY
+    values the host ever reads.
     """
     n = comp.shape[0]
     cap = mask.shape[0]
     pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
-    eid_base = (
-        jax.lax.axis_index(axis_name) * block0
-        if axis_name else jnp.zeros_like(block0)
-    )
 
     def one_round(comp, mask):
         cs = comp[src]          # PAD_VERTEX clamps → padding is a self-loop
@@ -134,9 +131,9 @@ def _run_interval(
             use_pallas=use_pallas)
         best = pmin(best)
         winners = alive & ((best[cs] == k) | (best[cd] == k))
-        # Record wins into the sharded bitmap; a winning edge always lives on
-        # the shard that owns its canonical slot, so the scatter is local.
-        slot = keys_lib.unpack_edge_id(key).astype(jnp.int64) - eid_base
+        # Record wins into the sharded bitmap; an edge's bitmap slot lives on
+        # the shard that loaded it (compaction is shard-local), so the
+        # scatter is local for every partitioner.
         mask = mask.at[jnp.where(winners, slot, cap)].set(True, mode="drop")
         # Merge: min-hooking + pointer doubling (GHS Connect/Initiate).
         hi = jnp.maximum(cs, cd).astype(jnp.uint32)
@@ -167,13 +164,17 @@ def _run_interval(
     return comp, mask, done, r, n_active
 
 
-def _compact_shard(comp, src, dst, key, *, cap: int):
+_PAD_SLOT = np.int32(0x7FFF0000)   # out of any mask range → scatter-dropped
+
+
+def _compact_shard(comp, src, dst, key, slot, *, cap: int):
     """Prefix-sum stream compaction of the local edge block to ``cap`` slots.
 
     Runs entirely on device — dead edges (endpoints in the same fragment)
-    are dropped, survivors slide to the front, the tail refills with the
-    inert padding sentinel.  ``cap`` is static (a power-of-two bucket), so
-    shapes stay rectangular across shards.
+    are dropped, survivors slide to the front (carrying their load-time
+    bitmap ``slot``), the tail refills with the inert padding sentinels.
+    ``cap`` is static (a power-of-two bucket), so shapes stay rectangular
+    across shards.
     """
     keep = (comp[src] != comp[dst]) & (key != INF_KEY)
     pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
@@ -184,14 +185,16 @@ def _compact_shard(comp, src, dst, key, *, cap: int):
         dst, mode="drop")
     new_key = jnp.full((cap,), INF_KEY, jnp.uint64).at[idx].set(
         key, mode="drop")
-    return new_src, new_dst, new_key
+    new_slot = jnp.full((cap,), _PAD_SLOT, jnp.int32).at[idx].set(
+        slot, mode="drop")
+    return new_src, new_dst, new_key, new_slot
 
 
 @functools.lru_cache(maxsize=64)
 def _build_interval_fn(mesh: Optional[Mesh], use_pallas: bool) -> Callable:
-    # block0/rounds are traced scalars, so one executable serves every
-    # interval length and graph size per (mesh, shapes).  comp/mask are the
-    # mutated state — donate so device buffers are reused in place.
+    # rounds is a traced scalar, so one executable serves every interval
+    # length and graph size per (mesh, shapes).  comp/mask are the mutated
+    # state — donate so device buffers are reused in place.
     donate = runtime.donation(0, 1)
     if mesh is None:
         fn = partial(_run_interval, axis_name=None, use_pallas=use_pallas)
@@ -199,7 +202,8 @@ def _build_interval_fn(mesh: Optional[Mesh], use_pallas: bool) -> Callable:
     fn = compat.shard_map(
         partial(_run_interval, axis_name=_AXIS, use_pallas=use_pallas),
         mesh,
-        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS), P(), P()),
+        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS),
+                  P()),
         out_specs=(P(), P(_AXIS), P(), P(), P()),
     )
     return jax.jit(fn, donate_argnums=donate)
@@ -213,33 +217,33 @@ def _build_compact_fn(mesh: Optional[Mesh], cap: int) -> Callable:
         return jax.jit(partial(_compact_shard, cap=cap))
     fn = compat.shard_map(
         partial(_compact_shard, cap=cap), mesh,
-        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS)),
-        out_specs=(P(_AXIS), P(_AXIS), P(_AXIS)),
+        in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS)),
+        out_specs=(P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS)),
     )
     return jax.jit(fn)
 
 
 def _device_engine(
-    graph: Graph,
+    source,
     params: GHSParams,
     mesh: Optional[Mesh],
     max_rounds: Optional[int],
 ) -> tuple[ForestResult, BoruvkaStats]:
-    n, m = graph.num_vertices, graph.num_edges
     num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     chunk = max(8 * num_shards, num_shards)
 
-    wbits = graph.weight.view(np.uint32)
-    if np.any(wbits == INF32):
-        raise ValueError("weights collide with the INF sentinel")
+    if isinstance(source, Graph):
+        # Host-built weights may be arbitrary; the pipeline's are (0, 1) by
+        # construction, so only the host path needs the sentinel check.
+        if np.any(source.weight.view(np.uint32) == INF32):
+            raise ValueError("weights collide with the INF sentinel")
 
     with enable_x64():
-        src_p, dst_p, key_p = _pad_pow2(
-            [graph.src.astype(np.int32), graph.dst.astype(np.int32),
-             graph.packed_keys()],
-            chunk, [PAD_VERTEX, PAD_VERTEX, INF_KEY])
-        m0 = src_p.shape[0]
-        block0 = m0 // num_shards
+        bundle = runtime.prepare_edges(
+            source, params.partitioner, mesh, chunk=chunk)
+        n, m = bundle.num_vertices, bundle.num_edges
+        layout = bundle.layout
+        m0 = layout.num_slots
 
         edge_sh = NamedSharding(mesh, P(_AXIS)) if mesh is not None else None
         repl_sh = NamedSharding(mesh, P()) if mesh is not None else None
@@ -247,9 +251,8 @@ def _device_engine(
         def put(a, sh):
             return jax.device_put(a, sh) if sh is not None else jnp.asarray(a)
 
-        src_d = put(src_p, edge_sh)
-        dst_d = put(dst_p, edge_sh)
-        key_d = put(key_p, edge_sh)
+        src_d, dst_d, key_d, slot_d = (bundle.src, bundle.dst, bundle.key,
+                                       bundle.slot)
         comp_dev = put(np.arange(n, dtype=np.uint32), repl_sh)
         mask_dev = put(np.zeros(m0, dtype=bool), edge_sh)
 
@@ -257,18 +260,18 @@ def _device_engine(
         cap_rounds = max_rounds or (n + 2)
         stats = BoruvkaStats()
         history = []
-        box = dict(cur_block=block0)
+        box = dict(cur_block=layout.block)
 
         fn = _build_interval_fn(mesh, params.use_pallas)
 
         def dispatch(s):
-            comp_dev, mask_dev, src_d, dst_d, key_d = s
+            comp_dev, mask_dev, src_d, dst_d, key_d, slot_d = s
             this_rounds = min(interval, cap_rounds - stats.rounds)
             comp_dev, mask_dev, done_t, r_t, act_t = fn(
-                comp_dev, mask_dev, src_d, dst_d, key_d, block0, this_rounds)
+                comp_dev, mask_dev, src_d, dst_d, key_d, slot_d, this_rounds)
             # The interval's scalar summary: three replicated values,
             # fetched by the runtime with ONE device_get.
-            return (comp_dev, mask_dev, src_d, dst_d, key_d), \
+            return (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d), \
                 (done_t, r_t, act_t)
 
         def finish(s, vals):
@@ -282,26 +285,28 @@ def _device_engine(
                 new_block = max(_pow2ceil(int(n_act)), 8)
                 if new_block < box["cur_block"]:   # shrink: ≤ log2 recompiles
                     cfn = _build_compact_fn(mesh, new_block)
-                    comp_dev, mask_dev, src_d, dst_d, key_d = s
-                    src_d, dst_d, key_d = cfn(comp_dev, src_d, dst_d, key_d)
-                    s = (comp_dev, mask_dev, src_d, dst_d, key_d)
+                    comp_dev, mask_dev, src_d, dst_d, key_d, slot_d = s
+                    src_d, dst_d, key_d, slot_d = cfn(
+                        comp_dev, src_d, dst_d, key_d, slot_d)
+                    s = (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d)
                     box["cur_block"] = new_block
                     stats.compactions += 1
             return s, False
 
-        comp_dev, mask_dev, _, _, _ = runtime.interval_loop(
-            (comp_dev, mask_dev, src_d, dst_d, key_d), dispatch, finish,
-            stats=stats, max_intervals=cap_rounds,
-            fail_msg="Borůvka engine failed to converge")
+        comp_dev, mask_dev = runtime.interval_loop(
+            (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d), dispatch,
+            finish, stats=stats, max_intervals=cap_rounds,
+            fail_msg="Borůvka engine failed to converge")[:2]
 
         comp_final, mask_full = jax.device_get((comp_dev, mask_dev))
         stats.host_syncs += 1
 
     comp_final = np.asarray(comp_final)
-    # Slot i of the bitmap is canonical edge i (padding slots never set).
-    mask = np.asarray(mask_full)[:m].copy()
+    # The bitmap lives in the load-time slot layout; the layout maps slots
+    # back to canonical edge ids (padding slots never set).
+    mask = layout.canonical_mask(np.asarray(mask_full), m)
     ncomp = int(np.unique(comp_final).size)
-    res = runtime.forest_from_mask(graph, mask, num_components=ncomp)
+    res = runtime.forest_from_mask(bundle.graph(), mask, num_components=ncomp)
     res.check_consistent(n)
     stats.active_history = tuple(history)
     return res, stats
@@ -389,11 +394,12 @@ def _make_round_fn(mesh: Optional[Mesh], use_pallas: bool = False) -> Callable:
 
 
 def _host_engine(
-    graph: Graph,
+    source,
     params: GHSParams,
     mesh: Optional[Mesh],
     max_rounds: Optional[int],
 ) -> tuple[ForestResult, BoruvkaStats]:
+    graph = runtime.as_graph(source)
     n, m = graph.num_vertices, graph.num_edges
     num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     chunk = max(8 * num_shards, num_shards)
@@ -404,6 +410,18 @@ def _host_engine(
     eid = np.arange(m, dtype=np.uint32)
     if np.any(wbits == INF32):
         raise ValueError("weights collide with the INF sentinel")
+
+    # The legacy loop tracks edges by canonical id end to end, so a
+    # partitioner is simply the initial upload order here (compaction
+    # re-block-distributes the survivors, as the seed driver always did).
+    part = partition_lib.get_partitioner(params.partitioner)
+    if part.name != "block" and m:
+        order = np.concatenate([
+            np.flatnonzero(part.edge_shard(graph, num_shards) == s)
+            for s in range(num_shards)
+        ]).astype(np.int64)
+    else:
+        order = np.arange(m, dtype=np.int64)
 
     round_fn = _make_round_fn(mesh, use_pallas=params.use_pallas)
     comp_sharding = (
@@ -427,13 +445,14 @@ def _host_engine(
         jax.device_put(comp, comp_sharding) if comp_sharding is not None
         else jnp.asarray(comp)
     )
-    src_d, dst_d, wb_d, eid_d = put_edges([src, dst, wbits, eid])
+    src_d, dst_d, wb_d, eid_d = put_edges(
+        [src[order], dst[order], wbits[order], eid[order]])
 
     mask = np.zeros(m, dtype=bool)
     history = []
     cap = max_rounds or (n + 2)
     # Host mirror of the active edge set (for compaction + winner mapping).
-    box = dict(active=np.arange(m, dtype=np.int64))
+    box = dict(active=order.copy())
 
     def dispatch(s):
         comp_dev, src_d, dst_d, wb_d, eid_d, _ = s
@@ -493,16 +512,23 @@ def _host_engine(
 # ---------------------------------------------------------------------------
 
 def minimum_spanning_forest(
-    graph: Graph,
+    graph,
     params: GHSParams = DEFAULT_PARAMS,
     mesh: Optional[Mesh] = None,
     max_rounds: Optional[int] = None,
 ) -> tuple[ForestResult, BoruvkaStats]:
     """Run the optimized engine; returns the forest + execution stats.
 
+    ``graph`` is a host :class:`Graph` or a device-resident
+    :class:`repro.core.pipeline.DeviceEdges` — with the latter (and the
+    default ``block`` partitioner) edges flow from the generation pipeline
+    into the round loop without ever visiting host memory.
+
     ``params.round_loop`` selects the loop driver: ``"device"`` (default) is
     the fused host-sync-free ``lax.while_loop`` engine; ``"host"`` is the
-    legacy per-round host loop.  Both produce bit-identical forests.
+    legacy per-round host loop.  ``params.partitioner`` picks the edge
+    distribution (block / hashed / balanced — DESIGN.md §7).  All
+    combinations produce bit-identical forests.
     """
     if runtime.resolve_round_loop(params.round_loop) == "host":
         return _host_engine(graph, params, mesh, max_rounds)

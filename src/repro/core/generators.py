@@ -71,32 +71,41 @@ def ssca2(
         # With all-pairs intra-clique edges, E[deg] ≈ (2/3)·max_clique for
         # uniform clique sizes; solve for the paper's avg degree 32.
         max_clique = max(2, int(avg_degree * 3 / 2))
-    sizes = []
-    total = 0
-    while total < n:
-        s = int(rng.integers(1, max_clique + 1))
-        s = min(s, n - total)
-        sizes.append(s)
-        total += s
-    starts = np.cumsum([0] + sizes[:-1])
+    # Clique sizes: draw in batches until the prefix sum covers n, then cut
+    # at the boundary (E[size] draws per batch keep this to O(1) rounds).
+    sizes = np.zeros(0, dtype=np.int64)
+    while int(sizes.sum()) < n:
+        need = n - int(sizes.sum())
+        batch = max(2 * need // (max_clique + 1) + 1, 16)
+        sizes = np.concatenate(
+            [sizes, rng.integers(1, max_clique + 1, size=batch)])
+    cum = np.cumsum(sizes)
+    n_cliques = int(np.searchsorted(cum, n, side="left")) + 1
+    sizes = sizes[:n_cliques].copy()
+    sizes[-1] -= int(cum[n_cliques - 1]) - n      # trim overshoot to n
+    starts = np.concatenate([[0], np.cumsum(sizes[:-1])])
+    # Intra-clique edges, grouped by clique size: all cliques of size s share
+    # one triu template, broadcast over their start offsets — O(max_clique)
+    # rounds instead of O(n_cliques) Python iterations.
     srcs, dsts = [], []
-    for s0, sz in zip(starts, sizes):
-        if sz > 1:
-            u, v = np.triu_indices(sz, k=1)
-            srcs.append(u + s0)
-            dsts.append(v + s0)
-    # Inter-clique links: connect clique i to a uniformly chosen earlier clique
-    # (chain + chords), a few links each.
-    n_cliques = len(sizes)
+    for s in np.unique(sizes):
+        if s < 2:
+            continue
+        u, v = np.triu_indices(int(s), k=1)
+        s0 = starts[sizes == s]
+        srcs.append((s0[:, None] + u[None, :]).ravel())
+        dsts.append((s0[:, None] + v[None, :]).ravel())
+    # Inter-clique links: clique i draws ``links_per`` uniformly chosen
+    # earlier cliques (chain + chords) and a random endpoint on each side —
+    # fully vectorized (uniform [0, k) via floor(U·k)).
     if n_cliques > 1:
         links_per = 3
-        for i in range(1, n_cliques):
-            js = rng.integers(0, i, size=links_per)
-            for j in js:
-                u = starts[i] + rng.integers(0, sizes[i])
-                v = starts[j] + rng.integers(0, sizes[j])
-                srcs.append(np.array([u]))
-                dsts.append(np.array([v]))
+        i = np.repeat(np.arange(1, n_cliques, dtype=np.int64), links_per)
+        j = np.floor(rng.random(i.size) * i).astype(np.int64)
+        u = starts[i] + np.floor(rng.random(i.size) * sizes[i]).astype(np.int64)
+        v = starts[j] + np.floor(rng.random(i.size) * sizes[j]).astype(np.int64)
+        srcs.append(u)
+        dsts.append(v)
     src = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
     dst = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
     perm = rng.permutation(n)
@@ -142,11 +151,27 @@ def disconnected(
     return preprocess(src, dst, _weights(rng, src.shape[0]), n)
 
 
+def _pipeline_kind(kind: str):
+    """Host-oracle wrappers for the counter-based pipeline generators
+    (geo_knn / grid / chain / star — see repro.core.pipeline)."""
+    def gen(scale: int, avg_degree: int = 32, *, seed: int = 0) -> Graph:
+        from repro.core import pipeline
+        return pipeline.build_host(
+            pipeline.GraphSpec(kind, scale, avg_degree=avg_degree, seed=seed))
+    gen.__name__ = kind
+    return gen
+
+
 GENERATORS = {
     "rmat": rmat,
     "ssca2": ssca2,
     "random": uniform_random,
     "disconnected": disconnected,
+    # New scenario generators (device pipeline's host oracle path).
+    "geo_knn": _pipeline_kind("geo_knn"),
+    "grid": _pipeline_kind("grid"),
+    "chain": _pipeline_kind("chain"),
+    "star": _pipeline_kind("star"),
 }
 
 

@@ -682,7 +682,7 @@ def _host_driver(state, topo, params, mesh, stats, total_cap: int):
 
 
 def minimum_spanning_forest(
-    graph: Graph,
+    graph,
     params: GHSParams = DEFAULT_PARAMS,
     mesh: Optional[Mesh] = None,
     max_supersteps: Optional[int] = None,
@@ -690,11 +690,20 @@ def minimum_spanning_forest(
 ) -> tuple[ForestResult, GHSStats]:
     """Run the faithful GHS engine; returns forest + execution stats.
 
+    ``graph`` is a host :class:`Graph` or a
+    :class:`repro.core.pipeline.DeviceEdges` (mirrored to host once — this
+    engine initializes its CSR shards host-side).  ``params.partitioner``
+    picks the vertex distribution: non-block partitions are realized as a
+    relabeling that preserves edge order and canonical ids
+    (:func:`runtime.vertex_partitioned`), so the forest — recorded by
+    canonical edge id — is bit-identical for every partitioner.
+
     ``params.round_loop`` selects the driver: ``"device"`` (default) runs
     ``check_frequency`` supersteps per host dispatch inside a fused
     ``lax.while_loop``; ``"host"`` is the legacy one-superstep-per-dispatch
     loop.  Both produce bit-identical forests.
     """
+    graph = runtime.as_graph(graph)
     loop = runtime.resolve_round_loop(params.round_loop)
     S = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     n = graph.num_vertices
@@ -702,7 +711,7 @@ def minimum_spanning_forest(
     empty_needed = max(params.empty_iter_cnt_to_break, 1)
     total_cap = cap + empty_needed - 1   # silence-confirmation steps are free
     topo, shards = init_shards(
-        graph, S, params,
+        runtime.vertex_partitioned(graph, params.partitioner, S), S, params,
         history_capacity=total_cap if collect_history else 1)
 
     if mesh is not None:

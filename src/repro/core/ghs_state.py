@@ -23,7 +23,8 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.graph import Graph, build_csr
+from repro.core import graph as graph_lib
+from repro.core.graph import Graph
 from repro.core.params import GHSParams
 
 INF32 = np.uint32(0xFFFFFFFF)
@@ -188,16 +189,36 @@ def init_shards(
     history_capacity: int = 1,
 ) -> tuple[GHSTopology, list[ShardState]]:
     """Partition the graph, pre-sort adjacency by weight, build hash tables,
-    wake every vertex (spontaneous awakening) and enqueue its Connect(0)."""
-    n = graph.num_vertices
-    csr = build_csr(graph)
-    wkey = graph.packed_keys()  # uint64 host-side sort key
+    wake every vertex (spontaneous awakening) and enqueue its Connect(0).
+
+    The per-partition CSR is built with TWO global lexsorts (by (vertex,
+    packed weight key) for the probe windows, by (vertex, neighbor id) for
+    the binary-search ablation) and sliced per shard — no per-vertex Python
+    loops, which dominated init at paper scales.  Packed keys are unique
+    per edge, so the sorts have no ties and the result is bit-identical to
+    the historical per-vertex ``argsort`` construction.
+    """
+    n, m = graph.num_vertices, graph.num_edges
+    wkey = graph.packed_keys  # uint64 host-side sort key (cached on graph)
     block = -(-n // num_shards)
     lanes = 5 if params.compress_messages else 8
     hcap = max(int(history_capacity), 1)
 
+    # Both-direction adjacency (shared incidence convention — graph.py),
+    # globally weight-sorted within each vertex window (paper §3.3 "probe
+    # Basic edges lightest-first" for free).
+    ends, gnbr, geid = graph_lib.both_direction_arrays(graph)
+    gnbr = gnbr.astype(np.int32)
+    geid = geid.astype(np.int32)
+    order = np.lexsort((wkey[geid], ends))
+    ends, gnbr, geid = ends[order], gnbr[order], geid[order]
+    gptr = graph_lib.vertex_indptr(ends, n)
+    deg = np.diff(gptr)
+    # Per-window neighbor-id order (binary-search ablation): one lexsort by
+    # (vertex, neighbor id) yields each window's id-sorted positions.
+    gbyid = np.lexsort((gnbr, ends)).astype(np.int64)
+
     # per-shard adjacency sizes
-    deg = csr.degree()
     shard_edges = [
         int(deg[s * block: min(n, (s + 1) * block)].sum())
         for s in range(num_shards)
@@ -232,22 +253,13 @@ def init_shards(
     for s in range(num_shards):
         v0, v1 = s * block, min(n, (s + 1) * block)
         nloc = v1 - v0
-        # Gather adjacency of owned vertices, re-sorted by weight per vertex.
-        parts_nbr, parts_eid, ptr = [], [], [0]
-        for v in range(v0, v1):
-            a, b = csr.indptr[v], csr.indptr[v + 1]
-            eids = csr.edge_index[a:b]
-            order = np.argsort(wkey[eids], kind="stable")
-            parts_nbr.append(csr.neighbor[a:b][order])
-            parts_eid.append(eids[order])
-            ptr.append(ptr[-1] + (b - a))
-        nbr = (np.concatenate(parts_nbr) if parts_nbr else
-               np.zeros(0, np.int32)).astype(np.int32)
-        eid = (np.concatenate(parts_eid) if parts_eid else
-               np.zeros(0, np.int32)).astype(np.int32)
-        mloc = nbr.shape[0]
+        # Slice the owned vertices' windows out of the global sorted arrays.
+        a0, a1 = int(gptr[v0]), int(gptr[v1])
+        mloc = a1 - a0
+        nbr = gnbr[a0:a1].astype(np.int32)
+        eid = geid[a0:a1].astype(np.int32)
         indptr = np.zeros(block + 1, np.int32)
-        indptr[1:nloc + 1] = np.asarray(ptr[1:], np.int32)
+        indptr[1:nloc + 1] = (gptr[v0 + 1:v1 + 1] - a0).astype(np.int32)
         indptr[nloc + 1:] = indptr[nloc]
         # pad adjacency
         pad = eb - mloc
@@ -262,9 +274,7 @@ def init_shards(
         etb[mloc:] = INF32
         # per-window neighbor-id order (binary-search ablation)
         byid = np.arange(eb, dtype=np.int32)
-        for lv in range(nloc):
-            a, b = indptr[lv], indptr[lv + 1]
-            byid[a:b] = a + np.argsort(nbr[a:b], kind="stable")
+        byid[:mloc] = (gbyid[a0:a1] - a0).astype(np.int32)
         # hash table over (local vertex, neighbor) -> position
         if params.use_hashing:
             owner_lv = np.repeat(np.arange(nloc, dtype=np.int32),
@@ -279,40 +289,42 @@ def init_shards(
         se = np.zeros(eb, np.int32)
         sn = np.full(block, FOUND, np.int32)
         ln = np.zeros(block, np.uint32)
-        # Spontaneous awakening: mark min edge Branch, queue Connect(0).
-        msgs_by_dest: list[list[np.ndarray]] = [[] for _ in range(num_shards)]
-        local_msgs = []
-        for lv in range(nloc):
-            a, b = indptr[lv], indptr[lv + 1]
-            if a == b:
-                continue  # isolated vertex: its own component
-            se[a] = BRANCH
-            dest = int(nbr[a])
-            msg = encode_messages(lanes, CONNECT, 0, 0, v0 + lv, dest, 0, 0)[0]
-            ds = dest // block
-            if ds == s:
-                local_msgs.append(msg)
-            else:
-                msgs_by_dest[ds].append(msg)
+        # Spontaneous awakening (vectorized): every non-isolated owned vertex
+        # marks its lightest edge Branch (window start — weight-sorted) and
+        # queues Connect(0) to that neighbor, in ascending vertex order.
+        lvs = np.flatnonzero(np.diff(indptr[:nloc + 1]) > 0).astype(np.int64)
+        starts = indptr[lvs]
+        se[starts] = BRANCH
+        dests = nbr[starts].astype(np.int64)
+        wake = encode_messages(lanes, CONNECT, 0, 0,
+                               (v0 + lvs).astype(np.uint32),
+                               dests.astype(np.uint32), 0, 0) \
+            if lvs.size else np.zeros((0, lanes), np.uint32)
+        ds_all = dests // block
 
         mq = np.zeros((qcap, lanes), np.uint32)
-        k = len(local_msgs)
+        local = ds_all == s
+        k = int(local.sum())
         if k > qcap:
             raise RuntimeError(
                 f"GHS queue overflow at init: {k} wake-up messages exceed "
                 f"queue_capacity={qcap}")
         if k:
-            mq[:k] = np.stack(local_msgs)
+            mq[:k] = wake[local]
         og = np.zeros((num_shards, ocap, lanes), np.uint32)
         og_tail = np.zeros(num_shards, np.int32)
-        for ds, msgs in enumerate(msgs_by_dest):
-            if len(msgs) > ocap:
+        for ds in range(num_shards):
+            if ds == s:
+                continue
+            sel = ds_all == ds
+            cnt = int(sel.sum())
+            if cnt > ocap:
                 raise RuntimeError(
-                    f"GHS queue overflow at init: {len(msgs)} wake-up "
+                    f"GHS queue overflow at init: {cnt} wake-up "
                     f"messages exceed queue_capacity={ocap}")
-            if msgs:
-                og[ds, :len(msgs)] = np.stack(msgs)
-                og_tail[ds] = len(msgs)
+            if cnt:
+                og[ds, :cnt] = wake[sel]
+                og_tail[ds] = cnt
 
         shards.append(ShardState(
             sn=sn, ln=ln,

@@ -8,6 +8,7 @@ over BOTH directions, matching the paper's per-process CRS layout (§3).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import numpy as np
@@ -28,8 +29,12 @@ class Graph:
     def num_edges(self) -> int:
         return int(self.src.shape[0])
 
+    @functools.cached_property
     def packed_keys(self) -> np.ndarray:
-        """uint64 sortable (weight ‖ edge_id) keys — see keys.py (C3/C6)."""
+        """uint64 sortable (weight ‖ edge_id) keys — see keys.py (C3/C6).
+
+        Cached: every ``pad_edges`` / repartition / oracle call reuses one
+        array (the graph is frozen, so the keys can never go stale)."""
         eid = np.arange(self.num_edges, dtype=np.uint32)
         return keys_lib.pack_keys_np(self.weight, eid)
 
@@ -57,7 +62,12 @@ class CSRAdjacency:
 
 
 def pair_ids(u: np.ndarray, v: np.ndarray, num_vertices: int) -> np.ndarray:
-    """Unique uint64 id per vertex pair (assumes u, v < num_vertices < 2**32)."""
+    """Unique uint64 id per vertex pair — requires vertex ids to fit the
+    32-bit lanes of the packing, checked here (the one place the whole
+    codebase assumes it)."""
+    assert num_vertices < 2 ** 32, (
+        f"pair_ids packs vertex ids into 32-bit lanes; num_vertices="
+        f"{num_vertices} overflows them")
     return (u.astype(np.uint64) << np.uint64(32)) | v.astype(np.uint64)
 
 
@@ -91,20 +101,39 @@ def preprocess(
     return g
 
 
+def both_direction_arrays(
+    graph: Graph,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unsorted both-direction incidence: (ends, neighbors, edge ids).
+
+    The ONE home for the mirroring convention (canonical edge i appears as
+    entries i and i+M); every adjacency builder sorts these by its own key
+    (neighbor id for :func:`build_csr`, packed weight key for the GHS
+    shards) so the structures can never drift apart.
+    """
+    m = graph.num_edges
+    ends = np.concatenate([graph.src, graph.dst]).astype(np.int64)
+    nbrs = np.concatenate([graph.dst, graph.src]).astype(np.int64)
+    eidx = np.concatenate([np.arange(m, dtype=np.int64)] * 2)
+    return ends, nbrs, eidx
+
+
+def vertex_indptr(ends: np.ndarray, num_vertices: int) -> np.ndarray:
+    """CSR window offsets from (sorted-by-vertex) incidence endpoints."""
+    counts = np.bincount(ends, minlength=num_vertices).astype(np.int64)
+    indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr
+
+
 def build_csr(graph: Graph) -> CSRAdjacency:
     """Both-direction CSR; neighbor lists sorted by neighbor id (paper §3.3's
     "sorted incident edges" variant, which we get for free by construction)."""
-    n, m = graph.num_vertices, graph.num_edges
-    ends = np.concatenate([graph.src, graph.dst])
-    nbrs = np.concatenate([graph.dst, graph.src])
-    eidx = np.concatenate([np.arange(m, dtype=np.int64)] * 2)
+    ends, nbrs, eidx = both_direction_arrays(graph)
     order = np.lexsort((nbrs, ends))
     ends, nbrs, eidx = ends[order], nbrs[order], eidx[order]
-    counts = np.bincount(ends, minlength=n).astype(np.int64)
-    indptr = np.zeros(n + 1, dtype=np.int64)
-    np.cumsum(counts, out=indptr[1:])
     return CSRAdjacency(
-        indptr=indptr,
+        indptr=vertex_indptr(ends, graph.num_vertices),
         neighbor=nbrs.astype(np.int32),
         edge_index=eidx.astype(np.int32),
     )
@@ -132,7 +161,7 @@ def pad_edges(
     src = np.concatenate([graph.src, np.full(pad, PAD_VERTEX, np.int32)])
     dst = np.concatenate([graph.dst, np.full(pad, PAD_VERTEX, np.int32)])
     key = np.concatenate(
-        [graph.packed_keys(), np.full(pad, keys_lib.INF_KEY, np.uint64)]
+        [graph.packed_keys, np.full(pad, keys_lib.INF_KEY, np.uint64)]
     )
     valid = np.concatenate([np.ones(m, bool), np.zeros(pad, bool)])
     return src, dst, key, valid

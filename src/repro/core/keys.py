@@ -38,6 +38,22 @@ INF_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
 # Any key with this weight-field is treated as "no edge".
 INF_BITS = np.uint32(0xFFFFFFFF)
 
+# splitmix64 constants — the ONE home for them (the counter-based pipeline
+# RNG and the hashed partitioner both build on this finalizer; keeping a
+# single copy keeps their streams from silently diverging).
+SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SPLITMIX_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SPLITMIX_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(x):
+    """splitmix64 finalizer over a uint64 array — identical arithmetic under
+    numpy and jax.numpy (uint64 wraparound, operator-overloaded)."""
+    z = x + SPLITMIX_GAMMA
+    z = (z ^ (z >> np.uint64(30))) * _SPLITMIX_M1
+    z = (z ^ (z >> np.uint64(27))) * _SPLITMIX_M2
+    return z ^ (z >> np.uint64(31))
+
 
 def pack_keys_np(weight: np.ndarray, edge_id: np.ndarray) -> np.ndarray:
     """numpy: pack float32 weights + uint32 edge ids into sortable uint64."""

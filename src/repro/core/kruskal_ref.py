@@ -51,7 +51,7 @@ class _DSU:
 
 
 def kruskal(graph: Graph) -> ForestResult:
-    order = np.argsort(graph.packed_keys(), kind="stable")
+    order = np.argsort(graph.packed_keys, kind="stable")
     dsu = _DSU(graph.num_vertices)
     mask = np.zeros(graph.num_edges, dtype=bool)
     taken = 0
@@ -82,7 +82,7 @@ def boruvka_numpy(graph: Graph) -> ForestResult:
     order), so cross-checking the three implementations is meaningful.
     """
     n, m = graph.num_vertices, graph.num_edges
-    key = graph.packed_keys()
+    key = graph.packed_keys
     src = graph.src.astype(np.int64)
     dst = graph.dst.astype(np.int64)
     comp = np.arange(n, dtype=np.int64)

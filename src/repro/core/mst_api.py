@@ -11,7 +11,6 @@ from typing import Optional
 from jax.sharding import Mesh
 
 from repro.core import boruvka_dist, ghs_message, runtime
-from repro.core.graph import Graph
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 
@@ -24,7 +23,7 @@ _ENGINES = {
 
 
 def minimum_spanning_forest(
-    graph: Graph,
+    graph,
     method: str = "boruvka",
     params: GHSParams = DEFAULT_PARAMS,
     mesh: Optional[Mesh] = None,
@@ -32,16 +31,24 @@ def minimum_spanning_forest(
 ) -> tuple[ForestResult, runtime.EngineStats]:
     """Compute the minimum spanning forest of ``graph``.
 
+    ``graph`` is a host :class:`Graph` or a device-resident
+    :class:`repro.core.pipeline.DeviceEdges` from the sharded graph
+    pipeline — the Borůvka engine consumes the latter without an edge
+    round-trip through host memory (DESIGN.md §7).
+
     method='ghs'     — paper-faithful message-driven GHS (the reproduction).
     method='boruvka' — TPU-native synchronous engine (beyond-paper optimized).
 
     For BOTH engines ``params.round_loop`` picks the device-resident fused
     loop (default — at most one host sync per ``check_frequency`` interval)
-    or the legacy host-driven loop.  Both return ``(ForestResult, stats)``
-    with ``stats`` deriving from :class:`repro.core.runtime.EngineStats`;
-    the forest is bit-identical between engines and loop drivers (and to
-    the Kruskal oracle) because all of them elect edges under the same
-    packed (weight, edge-id) total order of :mod:`repro.core.keys`.
+    or the legacy host-driven loop, and ``params.partitioner`` picks the
+    graph distribution (block / hashed / balanced, applied to edges for
+    Borůvka and to vertices for GHS — :mod:`repro.core.partition`).  All
+    return ``(ForestResult, stats)`` with ``stats`` deriving from
+    :class:`repro.core.runtime.EngineStats`; the forest is bit-identical
+    between engines, loop drivers, and partitioners (and to the Kruskal
+    oracle) because all of them elect edges under the same packed
+    (weight, edge-id) total order of :mod:`repro.core.keys`.
     """
     try:
         engine = _ENGINES[method]

@@ -45,6 +45,14 @@ class GHSParams:
     # Engine-runtime extras (beyond paper) — shared by BOTH engines.
     compaction: str = "pow2"          # 'none' | 'pow2' lazy edge compaction
     use_pallas: bool = False          # route segment-min through the Pallas kernel
+    partitioner: str = "block"        # graph distribution (DESIGN.md §7):
+                                      # 'block' — contiguous slots / vertex ids
+                                      #   (today's layout)
+                                      # 'hashed' — pseudo-random scatter
+                                      # 'balanced' — degree/edge-balanced
+                                      # Edges for the Borůvka engine, vertices
+                                      # (via relabeling) for GHS; every choice
+                                      # yields a bit-identical forest.
     round_loop: str = "device"        # 'device': fused lax.while_loop engine
                                       #   (≤ 1 host sync per check_frequency
                                       #   interval, both engines)

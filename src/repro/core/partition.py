@@ -1,0 +1,236 @@
+"""Pluggable graph partitioners (DESIGN.md §7).
+
+Both engines consume the partition choice through :mod:`repro.core.runtime`:
+
+* The synchronous Borůvka engine distributes **edges** — a partitioner maps
+  every canonical edge to a shard, and :func:`build_edge_layout` freezes that
+  assignment into an :class:`EdgeLayout` (uniform per-shard slot blocks, slot
+  → canonical-edge-id table).  The engine records tree edges by *slot*, so
+  any layout yields the same forest; the layout only moves work around.
+* The faithful GHS engine distributes **vertices** ("sequentially in blocks",
+  paper §3).  A partitioner supplies a vertex *relabeling* permutation such
+  that the engine's fixed block rule (`owner = new_id // block`) realizes the
+  desired assignment.  Relabeling preserves edge order, weights, and
+  canonical edge ids, so the elected forest is bit-identical for every
+  partitioner — only message routing changes.
+
+Partitioners (Sanders & Schimek: load balance, not the solver, decides
+scaling at the top end):
+
+* ``block``    — today's layout: contiguous slots / contiguous vertex ids.
+* ``hashed``   — pseudo-random scatter (splitmix64), destroys skew hot-spots.
+* ``balanced`` — degree/edge-balanced: edge blocks snap to source-vertex
+  boundaries with ~equal edge counts; vertices snake-packed by degree so
+  every shard holds ~the same adjacency volume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import keys as keys_lib
+from repro.core.graph import Graph
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 (keys.py — the shared finalizer) over uint64 ids."""
+    return keys_lib.splitmix64(x.astype(np.uint64))
+
+
+def pow2ceil(x: int) -> int:
+    """Smallest power of two ≥ x (shared by layouts and engine buckets)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeLayout:
+    """Frozen edge→slot assignment: ``num_shards`` uniform blocks of
+    ``block`` slots; ``eid[slot]`` is the canonical edge id held by that
+    slot, or -1 for a padding slot."""
+
+    num_shards: int
+    block: int
+    eid: np.ndarray            # (num_shards * block,) int64
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_shards * self.block
+
+    def canonical_mask(self, slot_mask: np.ndarray, num_edges: int) -> np.ndarray:
+        """Map a per-slot tree bitmap back to canonical edge ids."""
+        slot_mask = np.asarray(slot_mask, dtype=bool)
+        mask = np.zeros(num_edges, dtype=bool)
+        sel = slot_mask & (self.eid >= 0)
+        mask[self.eid[sel]] = True
+        return mask
+
+
+class Partitioner:
+    """Partitioner contract — see module docstring and DESIGN.md §7."""
+
+    name: str = "?"
+
+    def edge_shard(self, graph: Graph, num_shards: int) -> np.ndarray:
+        """(M,) int64 shard id per canonical edge."""
+        raise NotImplementedError
+
+    def vertex_perm(self, graph: Graph, num_shards: int) -> np.ndarray:
+        """(N,) int64 new vertex id per old id; the engine's block rule
+        (``owner = new_id // ceil(N / S)``) realizes the assignment, so the
+        permutation must place ≤ ceil(N / S) vertices in each block."""
+        raise NotImplementedError
+
+
+class BlockPartitioner(Partitioner):
+    """Today's layout: contiguous canonical-order blocks / identity labels."""
+
+    name = "block"
+
+    def edge_shard(self, graph: Graph, num_shards: int) -> np.ndarray:
+        block = -(-graph.num_edges // num_shards) if graph.num_edges else 1
+        return np.arange(graph.num_edges, dtype=np.int64) // block
+
+    def vertex_perm(self, graph: Graph, num_shards: int) -> np.ndarray:
+        return np.arange(graph.num_vertices, dtype=np.int64)
+
+
+class HashedPartitioner(Partitioner):
+    """Pseudo-random scatter of edges (by canonical id) and vertices."""
+
+    name = "hashed"
+
+    def edge_shard(self, graph: Graph, num_shards: int) -> np.ndarray:
+        h = _mix64(np.arange(graph.num_edges, dtype=np.uint64))
+        return (h % np.uint64(num_shards)).astype(np.int64)
+
+    def vertex_perm(self, graph: Graph, num_shards: int) -> np.ndarray:
+        n = graph.num_vertices
+        order = np.argsort(_mix64(np.arange(n, dtype=np.uint64)),
+                           kind="stable")
+        perm = np.empty(n, dtype=np.int64)
+        perm[order] = np.arange(n, dtype=np.int64)
+        return perm
+
+
+class BalancedPartitioner(Partitioner):
+    """Degree/edge-balanced assignment.
+
+    Edges: contiguous runs of the canonical (src-sorted) edge list with
+    boundaries snapped to source-vertex starts, so no vertex's outgoing list
+    is split while per-shard edge counts stay within one vertex's degree of
+    even.  Vertices: snake-packed by descending degree — shard s's block
+    collects every (2kS + s)-th and (2kS + 2S - 1 - s)-th heaviest vertex,
+    equalizing adjacency volume per shard.
+    """
+
+    name = "balanced"
+
+    def edge_shard(self, graph: Graph, num_shards: int) -> np.ndarray:
+        m = graph.num_edges
+        if m == 0:
+            return np.zeros(0, dtype=np.int64)
+        src = graph.src.astype(np.int64)
+        # Start index of each distinct-src run (canonical edges sort by src).
+        starts = np.flatnonzero(np.concatenate([[True], src[1:] != src[:-1]]))
+        targets = (m * np.arange(num_shards, dtype=np.int64)) // num_shards
+        # Snap each target boundary down to the run start at/before it.
+        bounds = starts[np.searchsorted(starts, targets, side="right") - 1]
+        bounds[0] = 0
+        bounds = np.maximum.accumulate(bounds)
+        return (np.searchsorted(bounds, np.arange(m), side="right")
+                - 1).astype(np.int64)
+
+    def vertex_perm(self, graph: Graph, num_shards: int) -> np.ndarray:
+        n, S = graph.num_vertices, num_shards
+        deg = np.zeros(n, dtype=np.int64)
+        np.add.at(deg, graph.src, 1)
+        np.add.at(deg, graph.dst, 1)
+        heavy_first = np.argsort(-deg, kind="stable")
+        # Walk the id space [0, S·block) column-major (one slot per shard
+        # per round), snaking the shard order every other round, and keep
+        # the ids < n — rank r (by descending degree) takes the r-th slot.
+        # Respects the engine's block capacities exactly: when S ∤ n the
+        # LAST block is short, and the invalid tail ids are simply never
+        # handed out (the old shard·block+within formula leaked ids ≥ n).
+        block = -(-n // S)
+        rows = np.arange(S, dtype=np.int64)
+        cols = np.arange(block, dtype=np.int64)
+        snake = np.where(cols[:, None] % 2 == 0,
+                         rows[None, :], rows[::-1][None, :])
+        ids = (snake * block + cols[:, None]).ravel()   # column-major walk
+        new_of_rank = ids[ids < n]
+        perm = np.empty(n, dtype=np.int64)
+        perm[heavy_first] = new_of_rank
+        return perm
+
+
+PARTITIONERS = {
+    p.name: p for p in (BlockPartitioner(), HashedPartitioner(),
+                        BalancedPartitioner())
+}
+
+
+def get_partitioner(name: str) -> Partitioner:
+    try:
+        return PARTITIONERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown partitioner {name!r}; options: "
+            f"{tuple(PARTITIONERS)}") from None
+
+
+def build_edge_layout(
+    graph: Graph, partitioner: Partitioner, num_shards: int, chunk: int
+) -> EdgeLayout:
+    """Freeze an edge partition into uniform per-shard slot blocks.
+
+    The ``block`` layout reproduces the engines' historical `_pad_pow2`
+    shape exactly (global tail padding, power-of-two multiple of ``chunk``);
+    other partitioners pad each shard independently to the max per-shard
+    count (power of two, ≥ 8) so shapes stay rectangular for SPMD.
+    """
+    m = graph.num_edges
+    if partitioner.name == "block":
+        target = max(chunk, 1)
+        while target < m:
+            target *= 2
+        eid = np.concatenate([
+            np.arange(m, dtype=np.int64),
+            np.full(target - m, -1, dtype=np.int64),
+        ])
+        return EdgeLayout(num_shards=num_shards,
+                          block=target // num_shards, eid=eid)
+
+    shard = partitioner.edge_shard(graph, num_shards)
+    counts = np.bincount(shard, minlength=num_shards) if m else \
+        np.zeros(num_shards, dtype=np.int64)
+    block = pow2ceil(max(int(counts.max()) if m else 0,
+                         max(chunk // num_shards, 8)))
+    eid = np.full(num_shards * block, -1, dtype=np.int64)
+    for s in range(num_shards):
+        sel = np.flatnonzero(shard == s)       # ascending: canonical order
+        eid[s * block: s * block + sel.size] = sel
+    return EdgeLayout(num_shards=num_shards, block=block, eid=eid)
+
+
+def relabel_graph(graph: Graph, perm: np.ndarray) -> Graph:
+    """Apply a vertex relabeling WITHOUT touching edge order or weights.
+
+    The returned graph's edge *i* is the same canonical edge *i* of the
+    input (same weight, same packed key), with endpoints renamed — so any
+    forest computed on it is directly a forest over the input's canonical
+    edges.  Canonical ``src < dst`` is restored under the new labels.
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    ps = perm[graph.src]
+    pd = perm[graph.dst]
+    return Graph(
+        num_vertices=graph.num_vertices,
+        src=np.minimum(ps, pd).astype(np.int32),
+        dst=np.maximum(ps, pd).astype(np.int32),
+        weight=graph.weight,
+    )

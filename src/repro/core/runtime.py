@@ -27,6 +27,15 @@ This module owns the pieces that are engine-independent:
   canonical edge bitmap to a :class:`ForestResult`.
 * :func:`resolve_round_loop` — validation of the ``params.round_loop`` knob
   shared by both engines (``"device"`` fused loop / ``"host"`` legacy).
+* :func:`prepare_edges` / :func:`vertex_partitioned` — the partition layer
+  (DESIGN.md §7): both engines receive their input through these, so the
+  ``params.partitioner`` knob and the device pipeline's no-host-round-trip
+  hand-off live in ONE place.  ``prepare_edges`` accepts a host
+  :class:`Graph` *or* a device-resident
+  :class:`repro.core.pipeline.DeviceEdges` and returns an
+  :class:`EdgeBundle` in engine layout; ``vertex_partitioned`` realizes a
+  vertex partition for the block-routed GHS engine as a relabeling that
+  preserves canonical edge ids (forests stay bit-identical).
 """
 from __future__ import annotations
 
@@ -36,7 +45,8 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core import partition as partition_lib
+from repro.core.graph import PAD_VERTEX, Graph
 from repro.core.kruskal_ref import ForestResult
 
 ROUND_LOOPS = ("device", "host")
@@ -127,3 +137,117 @@ def resolve_round_loop(round_loop: str) -> str:
         raise ValueError(
             f"unknown round_loop {round_loop!r}; options: {ROUND_LOOPS}")
     return round_loop
+
+
+# ---------------------------------------------------------------------------
+# Partition layer (DESIGN.md §7) — both engines' single entry for edges
+# ---------------------------------------------------------------------------
+
+def as_graph(source) -> Graph:
+    """Host :class:`Graph` view of an engine input (Graph or DeviceEdges)."""
+    if isinstance(source, Graph):
+        return source
+    return source.to_graph()
+
+
+@dataclasses.dataclass
+class EdgeBundle:
+    """Edge state in engine layout, ready for the round loop.
+
+    ``src``/``dst``/``key`` are device arrays of ``layout.num_slots`` slots
+    (edge-sharded under a mesh); ``slot`` carries each slot's own index
+    within its shard so tree-edge recording stays a local scatter under ANY
+    partition, surviving on-device compaction (the winner bitmap keeps the
+    load-time slot layout for the whole run).  ``source`` retains the
+    caller's input for lazy host mirroring (ForestResult construction).
+    """
+
+    layout: partition_lib.EdgeLayout
+    src: Any
+    dst: Any
+    key: Any
+    slot: Any
+    num_vertices: int
+    num_edges: int
+    source: Any
+
+    def graph(self) -> Graph:
+        return as_graph(self.source)
+
+
+def prepare_edges(
+    source, partitioner_name: str, mesh, *, chunk: int
+) -> EdgeBundle:
+    """Stage edges on device under the chosen partitioner.
+
+    * host :class:`Graph` — the partitioner's :class:`EdgeLayout` is built
+      host-side, arrays are gathered into slot order and uploaded once.
+    * :class:`~repro.core.pipeline.DeviceEdges` + ``block`` partitioner —
+      the pipeline's canonical buffers ARE the block layout: they are handed
+      to the engine as-is, no edge ever crossing back to host.  (Non-block
+      partitioners fall back to the host mirror: their layouts are host
+      decisions by design.)
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import keys as keys_lib
+    from repro.core import pipeline as pipeline_lib
+
+    part = partition_lib.get_partitioner(partitioner_name)
+    num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+    edge_sh = NamedSharding(mesh, P("x")) if mesh is not None else None
+
+    def put(a):
+        import jax.numpy as jnp
+        return (jax.device_put(a, edge_sh) if edge_sh is not None
+                else jnp.asarray(a))
+
+    if (isinstance(source, pipeline_lib.DeviceEdges)
+            and part.name == "block"
+            and source.capacity % num_shards == 0):
+        cap = source.capacity
+        block = cap // num_shards
+        eid = np.arange(cap, dtype=np.int64)
+        eid[source.num_edges:] = -1
+        layout = partition_lib.EdgeLayout(num_shards=num_shards,
+                                          block=block, eid=eid)
+        # device_put re-lays-out to the engine mesh if the pipeline was
+        # built on a different one; a no-op placement otherwise.
+        src_d, dst_d, key_d = (put(source.src), put(source.dst),
+                               put(source.key))
+        n, m = source.num_vertices, source.num_edges
+    else:
+        graph = as_graph(source)
+        layout = partition_lib.build_edge_layout(
+            graph, part, num_shards, chunk)
+        valid = layout.eid >= 0
+        gather = layout.eid[valid]
+        src_p = np.full(layout.num_slots, PAD_VERTEX, np.int32)
+        dst_p = np.full(layout.num_slots, PAD_VERTEX, np.int32)
+        key_p = np.full(layout.num_slots, keys_lib.INF_KEY, np.uint64)
+        src_p[valid] = graph.src[gather]
+        dst_p[valid] = graph.dst[gather]
+        key_p[valid] = graph.packed_keys[gather]
+        src_d, dst_d, key_d = put(src_p), put(dst_p), put(key_p)
+        n, m = graph.num_vertices, graph.num_edges
+
+    slot_np = (np.arange(layout.num_slots, dtype=np.int64)
+               % layout.block).astype(np.int32)
+    return EdgeBundle(layout=layout, src=src_d, dst=dst_d, key=key_d,
+                      slot=put(slot_np), num_vertices=n, num_edges=m,
+                      source=source)
+
+
+def vertex_partitioned(graph: Graph, partitioner_name: str,
+                       num_shards: int) -> Graph:
+    """Realize a vertex partition for the block-routed GHS engine.
+
+    Returns a relabeled graph whose block distribution equals the
+    partitioner's assignment.  Edge order, weights, and canonical edge ids
+    are untouched, so the engine's forest (recorded by canonical id) is
+    bit-identical to running on the original labels.
+    """
+    part = partition_lib.get_partitioner(partitioner_name)
+    if part.name == "block":
+        return graph
+    perm = part.vertex_perm(graph, num_shards)
+    return partition_lib.relabel_graph(graph, perm)

@@ -135,6 +135,55 @@ print(json.dumps(res))
     assert rec["ok"] == {"device": True, "host": True}
 
 
+def test_partitioners_and_pipeline_multidevice():
+    """DESIGN.md §7 acceptance: every partitioner yields the exact Kruskal
+    forest on 1/2/4 shards (both engines), and the device pipeline feeds
+    the Borůvka engine shard-resident edges that elect the same forest."""
+    out = run_child("""
+import numpy as np, json
+from repro.compat import make_mesh
+from repro.core import generators, kruskal_ref, pipeline
+from repro.core.mst_api import minimum_spanning_forest
+from repro.core.params import GHSParams
+from repro.core.pipeline import GraphSpec
+
+g = generators.generate("rmat", 8, seed=9)
+want = kruskal_ref.kruskal(g)
+gg = generators.generate("rmat", 6, seed=9)
+want_g = kruskal_ref.kruskal(gg)
+spec = GraphSpec("rmat", 9, seed=4)
+want_p = kruskal_ref.kruskal(pipeline.build_host(spec))
+rows = []
+for shards in (1, 2, 4):
+    mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+    for part in ("block", "hashed", "balanced"):
+        got, st = minimum_spanning_forest(
+            g, method="boruvka", params=GHSParams(partitioner=part),
+            mesh=mesh)
+        rows.append(dict(
+            shards=shards, part=part, engine="boruvka",
+            ok=bool(np.array_equal(got.edge_mask, want.edge_mask)),
+            sync_ok=bool(st.host_syncs == st.intervals + 1)))
+        got, st = minimum_spanning_forest(
+            gg, method="ghs", params=GHSParams(partitioner=part), mesh=mesh)
+        rows.append(dict(
+            shards=shards, part=part, engine="ghs",
+            ok=bool(np.array_equal(got.edge_mask, want_g.edge_mask)),
+            sync_ok=bool(st.host_syncs == st.intervals + 1)))
+    dev = pipeline.build(spec, mesh=mesh)
+    got, st = minimum_spanning_forest(dev, method="boruvka", mesh=mesh)
+    rows.append(dict(
+        shards=shards, part="block", engine="boruvka-deviceedges",
+        ok=bool(np.array_equal(got.edge_mask, want_p.edge_mask)),
+        sync_ok=bool(st.host_syncs == st.intervals + 1)))
+print(json.dumps(rows))
+""", devices=4)
+    rows = json.loads(out.strip().splitlines()[-1])
+    assert len(rows) == 3 * (3 * 2 + 1)
+    bad = [r for r in rows if not (r["ok"] and r["sync_ok"])]
+    assert not bad, bad
+
+
 def test_ep_moe_matches_ragged_when_dropfree():
     run_child("""
 import jax, jax.numpy as jnp

@@ -44,6 +44,33 @@ def test_ghs_forest_invariants(g):
     assert np.array_equal(got.edge_mask, want.edge_mask)
 
 
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=2, max_value=24),
+       st.integers(min_value=0, max_value=200))
+def test_preprocess_keeps_min_weight_duplicate(seed, n, m):
+    """§3.1 dedup property: for every surviving canonical pair, the kept
+    weight is the MINIMUM over all raw samples of that pair (in either
+    direction); self-loops vanish; pairs are unique and sorted."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    # few distinct weights over few vertices → dense duplicate collisions
+    w = rng.choice(np.asarray([0.125, 0.25, 0.5, 0.75], np.float32), m)
+    g = preprocess(src, dst, w, n)
+    want = {}
+    for a, b, ww in zip(src, dst, w):
+        if a == b:
+            continue
+        pair = (min(a, b), max(a, b))
+        want[pair] = min(want.get(pair, np.float32(np.inf)), ww)
+    got = {(int(u), int(v)): ww
+           for u, v, ww in zip(g.src, g.dst, g.weight)}
+    assert got == want
+    pid = (g.src.astype(np.uint64) << np.uint64(32)) | g.dst.astype(np.uint64)
+    assert np.all(np.diff(pid.astype(np.int64)) > 0)   # sorted, unique
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(min_value=0, max_value=2**31 - 1),
        st.integers(min_value=2, max_value=40))

@@ -1,0 +1,138 @@
+"""Batched multi-graph benchmark: vmapped bucket dispatch vs looped solves.
+
+The serving workload (DESIGN.md §8): many small/medium MST queries whose
+per-invocation dispatch + sync overhead dominates algorithmic work.  A mixed
+batch of rmat graphs (scales cycling over ``--scales``) is solved two ways:
+
+* **loop**    — one ``minimum_spanning_forest`` engine invocation per graph
+  (the fused single-graph device loop; this is already the PR-1 fast path).
+* **batched** — ``minimum_spanning_forests``: graphs bucketed by padded
+  shape, each bucket's round loop advanced under ``jax.vmap`` with ONE
+  dispatch and ONE scalar readback per interval for the whole bucket.
+
+Every batched forest is checked bit-identical to its single-graph solve and
+edge-set-exact against the Kruskal oracle, per run.  Emits
+``BENCH_batched.json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_batched.py
+    PYTHONPATH=src python benchmarks/bench_batched.py \
+        --batch 8 --repeats 1          # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def build_graphs(scales, batch: int):
+    from repro.core import generators
+    return [
+        generators.generate("rmat", scales[i % len(scales)], seed=100 + i)
+        for i in range(batch)
+    ]
+
+
+def run_loop(graphs, params):
+    from repro.core.mst_api import minimum_spanning_forest
+    results, syncs = [], 0
+    for g in graphs:
+        res, st = minimum_spanning_forest(
+            g, method="boruvka", params=params)
+        results.append(res)
+        syncs += st.host_syncs
+    return results, syncs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scales", default="8,9,10",
+                    help="comma-separated rmat scales cycled over the batch")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_batched.json")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    from repro.core import kruskal_ref
+    from repro.core.mst_api import minimum_spanning_forests
+    from repro.core.params import GHSParams
+
+    scales = [int(s) for s in args.scales.split(",") if s]
+    graphs = build_graphs(scales, args.batch)
+    params = GHSParams()
+
+    # Warm both paths (compile caches) before timing.
+    loop_results, _ = run_loop(graphs, params)
+    batched_results, warm_stats = minimum_spanning_forests(
+        graphs, params=params)
+
+    best_loop, loop_syncs = float("inf"), 0
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        loop_results, loop_syncs = run_loop(graphs, params)
+        best_loop = min(best_loop, time.perf_counter() - t0)
+
+    best_batch, stats = float("inf"), warm_stats
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        batched_results, stats = minimum_spanning_forests(
+            graphs, params=params)
+        best_batch = min(best_batch, time.perf_counter() - t0)
+
+    # Correctness gate: bit-identical to single solves AND oracle-exact.
+    bit_identical = oracle_exact = True
+    for g, single, batched in zip(graphs, loop_results, batched_results):
+        want = kruskal_ref.kruskal(g)
+        bit_identical &= bool(
+            np.array_equal(batched.edge_mask, single.edge_mask)
+            and batched.total_weight == single.total_weight)
+        oracle_exact &= bool(
+            np.array_equal(batched.edge_mask, want.edge_mask)
+            and batched.num_components == want.num_components)
+
+    n_graphs = len(graphs)
+    record = dict(
+        batch=n_graphs,
+        scales=scales,
+        num_edges_total=int(sum(g.num_edges for g in graphs)),
+        loop=dict(seconds=best_loop,
+                  graphs_per_s=n_graphs / best_loop,
+                  host_syncs=loop_syncs),
+        batched=dict(seconds=best_batch,
+                     graphs_per_s=n_graphs / best_batch,
+                     host_syncs=stats.host_syncs,
+                     intervals=stats.intervals,
+                     buckets=stats.buckets,
+                     bucket_shapes=[list(s) for s in stats.bucket_shapes],
+                     compactions=stats.compactions),
+        speedup=best_loop / best_batch,
+        all_bit_identical=bit_identical,
+        oracle_exact=oracle_exact,
+    )
+    # Sync contract: per bucket, one readback per interval + one final fetch.
+    record["batched"]["syncs_per_interval"] = (
+        (stats.host_syncs - stats.buckets) / max(stats.intervals, 1))
+
+    print(f"# batched bench — rmat scales {scales}, batch {n_graphs}, "
+          f"{record['num_edges_total']} edges total")
+    print(f"{'path':8s} {'time_s':>8s} {'graphs/s':>9s} {'syncs':>6s}")
+    print(f"{'loop':8s} {best_loop:8.3f} "
+          f"{record['loop']['graphs_per_s']:9.1f} {loop_syncs:6d}")
+    print(f"{'batched':8s} {best_batch:8.3f} "
+          f"{record['batched']['graphs_per_s']:9.1f} "
+          f"{stats.host_syncs:6d}")
+    print(f"speedup: {record['speedup']:.2f}x   buckets: {stats.buckets}   "
+          f"bit-identical: {bit_identical}   oracle-exact: {oracle_exact}")
+
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}")
+    if not (bit_identical and oracle_exact):
+        raise SystemExit("batched forests diverged")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -23,13 +23,20 @@ block-distributed, but labels are small — int32 per vertex).  The legacy
 host-driven loop is retained as ``params.round_loop == "host"`` for the
 before/after measurement in ``benchmarks/bench_round_loop.py`` and as an
 ablation baseline; both loops are bit-identical to the Kruskal oracle.
+
+For serving many graphs, :func:`minimum_spanning_forests` runs the SAME
+round body over a leading batch axis (``jax.vmap`` over shape-bucketed,
+padded lanes — DESIGN.md §8): one dispatch and one scalar readback per
+interval for a whole bucket, per-interval Borůvka contraction (sort-based
+fragment-pair dedup, provably election-invariant), and per-lane forests
+bit-identical to the corresponding single-graph solves.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +96,54 @@ class BoruvkaStats(runtime.EngineStats):
 # Fused device-resident loop (round_loop="device", the default)
 # ---------------------------------------------------------------------------
 
+def _one_round(
+    comp: jnp.ndarray,
+    mask: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    key: jnp.ndarray,
+    slot: jnp.ndarray,
+    *,
+    pmin: Callable,
+    use_pallas: bool,
+):
+    """One Borůvka round: fused MOE election, winner recording, merging.
+
+    Rank-polymorphic by construction: the single-graph interval calls it on
+    (n,)/(cap,) state and the batched engine maps it over a leading batch
+    axis with ``jax.vmap`` — both run the exact same ops, which is what
+    keeps batched lanes bit-identical to single-graph solves.
+    """
+    n = comp.shape[0]
+    cap = mask.shape[0]
+    cs = comp[src]          # PAD_VERTEX clamps → padding is a self-loop
+    cd = comp[dst]
+    alive = (cs != cd) & (key != INF_KEY)
+    k = jnp.where(alive, key, INF_KEY)
+    # Fused MOE election: ONE segmented min over both endpoints, ONE
+    # collective.  The packed key carries the tie-break, so no second
+    # (weight-match, edge-id) pass and no second pmin.
+    seg = jnp.concatenate([cs, cd]).astype(jnp.int32)
+    from repro.kernels.segment_min import ops as segops
+    best = segops.segment_min64(
+        jnp.concatenate([k, k]), seg, num_segments=n,
+        use_pallas=use_pallas)
+    best = pmin(best)
+    winners = alive & ((best[cs] == k) | (best[cd] == k))
+    # Record wins into the sharded bitmap; an edge's bitmap slot lives on
+    # the shard that loaded it (compaction is shard-local), so the
+    # scatter is local for every partitioner.
+    mask = mask.at[jnp.where(winners, slot, cap)].set(True, mode="drop")
+    # Merge: min-hooking + pointer doubling (GHS Connect/Initiate).
+    hi = jnp.maximum(cs, cd).astype(jnp.uint32)
+    lo = jnp.minimum(cs, cd).astype(jnp.uint32)
+    parent = union_find.hook_min(n, hi, lo, winners)
+    parent = pmin(parent)
+    parent = union_find.pointer_double(parent)
+    done = jnp.all(best == INF_KEY)
+    return parent[comp], mask, done
+
+
 def _run_interval(
     comp: jnp.ndarray,
     mask: jnp.ndarray,
@@ -112,37 +167,11 @@ def _run_interval(
     replicated (done, rounds-run, max local active count) triple — the ONLY
     values the host ever reads.
     """
-    n = comp.shape[0]
-    cap = mask.shape[0]
     pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
 
     def one_round(comp, mask):
-        cs = comp[src]          # PAD_VERTEX clamps → padding is a self-loop
-        cd = comp[dst]
-        alive = (cs != cd) & (key != INF_KEY)
-        k = jnp.where(alive, key, INF_KEY)
-        # Fused MOE election: ONE segmented min over both endpoints, ONE
-        # collective.  The packed key carries the tie-break, so no second
-        # (weight-match, edge-id) pass and no second pmin.
-        seg = jnp.concatenate([cs, cd]).astype(jnp.int32)
-        from repro.kernels.segment_min import ops as segops
-        best = segops.segment_min64(
-            jnp.concatenate([k, k]), seg, num_segments=n,
-            use_pallas=use_pallas)
-        best = pmin(best)
-        winners = alive & ((best[cs] == k) | (best[cd] == k))
-        # Record wins into the sharded bitmap; an edge's bitmap slot lives on
-        # the shard that loaded it (compaction is shard-local), so the
-        # scatter is local for every partitioner.
-        mask = mask.at[jnp.where(winners, slot, cap)].set(True, mode="drop")
-        # Merge: min-hooking + pointer doubling (GHS Connect/Initiate).
-        hi = jnp.maximum(cs, cd).astype(jnp.uint32)
-        lo = jnp.minimum(cs, cd).astype(jnp.uint32)
-        parent = union_find.hook_min(n, hi, lo, winners)
-        parent = pmin(parent)
-        parent = union_find.pointer_double(parent)
-        done = jnp.all(best == INF_KEY)
-        return parent[comp], mask, done
+        return _one_round(comp, mask, src, dst, key, slot,
+                          pmin=pmin, use_pallas=use_pallas)
 
     def cond(c):
         r, _, _, done = c
@@ -310,6 +339,389 @@ def _device_engine(
     res.check_consistent(n)
     stats.active_history = tuple(history)
     return res, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-graph engine (DESIGN.md §8): the same round loop under vmap
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchStats(BoruvkaStats):
+    """Stats for a batched solve.  ``rounds_per_graph`` (inherited from the
+    runtime protocol) is ordered like the input sequence; ``bucket_shapes``
+    records one ``(n_pad, cap, batch_size)`` triple per dispatched bucket."""
+
+    buckets: int = 0
+    bucket_shapes: tuple = ()
+
+    def merge(self, st: BoruvkaStats) -> None:
+        """Accumulate a sub-solve's ledger (one bucket, or one single-graph
+        fallback run) — the ONE place the shared counters are summed."""
+        self.host_syncs += st.host_syncs
+        self.intervals += st.intervals
+        self.rounds += st.rounds
+        self.compactions += st.compactions
+        self.edges_scanned += st.edges_scanned
+        self.active_history += st.active_history
+
+
+def _one_round_packed(comp, mask, src, dst, key, slot, *,
+                      s_bits: int, c_bits: int):
+    """One Borůvka round specialized to the batched identity layout.
+
+    Bit-identical to :func:`_one_round` (same elections, same winner set,
+    same merges) but cheaper on scatter-bound backends: the election value
+    packs (weight-bits ‖ edge-id ‖ other-endpoint-fragment) into one uint64
+    — appending the other fragment BELOW the unique edge id cannot change
+    the (weight, id) total order — so the elected ``best[f]`` already names
+    the winning edge's bitmap slot (slot == canonical id in this layout)
+    AND the fragment to merge with.  Winner recording and min-hooking then
+    scatter ``n_pad`` per-fragment requests instead of ``cap`` per-edge
+    ones; the only cap-scale scatter left is the election itself.
+    """
+    n = comp.shape[0]
+    cap = mask.shape[0]
+    ones = jnp.uint64(0xFFFFFFFFFFFFFFFF)
+    cs = comp[src]          # PAD_VERTEX clamps → padding is a self-loop
+    cd = comp[dst]
+    alive = (cs != cd) & (key != INF_KEY)
+    wbits = key >> jnp.uint64(32)
+    eid = key & jnp.uint64(0xFFFFFFFF)
+    base = ((wbits << jnp.uint64(c_bits + s_bits))
+            | (eid << jnp.uint64(s_bits)))
+    seg = jnp.concatenate([cs, cd]).astype(jnp.int32)
+    val = jnp.concatenate([
+        jnp.where(alive, base | cd.astype(jnp.uint64), ones),
+        jnp.where(alive, base | cs.astype(jnp.uint64), ones),
+    ])
+    best = jnp.full((n,), ones, jnp.uint64).at[seg].min(val, mode="drop")
+    elected = best != ones
+    best_eid = ((best >> jnp.uint64(s_bits))
+                & jnp.uint64((1 << c_bits) - 1)).astype(jnp.int32)
+    other = (best & jnp.uint64((1 << s_bits) - 1)).astype(jnp.uint32)
+    mask = mask.at[jnp.where(elected, best_eid, cap)].set(True, mode="drop")
+    f = jnp.arange(n, dtype=jnp.uint32)
+    hi = jnp.maximum(f, other)
+    lo = jnp.minimum(f, other)
+    parent = union_find.hook_min(n, hi, lo, elected)
+    parent = union_find.pointer_double(parent)
+    done = jnp.all(best == ones)
+    return parent[comp], mask, done
+
+
+def _contract_lane(comp, src, dst, key, *, s_bits: int, c_bits: int):
+    """Borůvka contraction of one batch lane — sort-based, scatter-free.
+
+    Endpoints are rewritten to their fragment labels and parallel
+    cross-fragment edges collapse to the min-key edge per fragment pair.
+    This cannot change any future election: a dropped edge shares its
+    fragment pair with a strictly smaller key, so it can never be ANY
+    fragment's minimum outgoing edge (and ``done`` still flips exactly when
+    no fragment has an outgoing edge).  Forests stay bit-identical.
+
+    The whole (lo-fragment, hi-fragment, weight-bits, edge-id) quadruple
+    packs into ONE uint64 — fragment labels fit ``s_bits`` each, (0, 2)
+    weights have zero sign/exponent-MSB so their IEEE bits fit 30, and in
+    the batched identity layout the canonical edge id doubles as the bitmap
+    slot and fits ``c_bits`` — so contraction is two *key-only* sorts (pair
+    grouping, then survivors-to-front), the cheap primitive on XLA:CPU
+    (DESIGN.md §7), instead of the per-element scatters that dominate the
+    round loop at serving scales.  Every field unpacks from the sorted key.
+    """
+    ones = jnp.uint64(0xFFFFFFFFFFFFFFFF)
+    cu = comp[src]          # PAD_VERTEX clamps → padding stays a self-loop
+    cd = comp[dst]
+    alive = (cu != cd) & (key != INF_KEY)
+    lo = jnp.minimum(cu, cd).astype(jnp.uint64)
+    hi = jnp.maximum(cu, cd).astype(jnp.uint64)
+    wbits = key >> jnp.uint64(32)
+    eid = key & jnp.uint64(0xFFFFFFFF)
+    packed = ((lo << jnp.uint64(c_bits + 30 + s_bits))
+              | (hi << jnp.uint64(c_bits + 30))
+              | (wbits << jnp.uint64(c_bits))
+              | eid)
+    packed = jnp.where(alive, packed, ones)
+    (packed,) = jax.lax.sort((packed,), num_keys=1)
+    pair = packed >> jnp.uint64(c_bits + 30)
+    valid = packed != ones
+    first = valid & jnp.concatenate(
+        [jnp.ones((1,), bool), pair[1:] != pair[:-1]])
+    count = first.sum(dtype=jnp.int32)
+    (kept,) = jax.lax.sort((jnp.where(first, packed, ones),), num_keys=1)
+    dead = kept == ones
+    eid2 = kept & jnp.uint64((1 << c_bits) - 1)
+    wb2 = (kept >> jnp.uint64(c_bits)) & jnp.uint64((1 << 30) - 1)
+    hi2 = (kept >> jnp.uint64(c_bits + 30)) & jnp.uint64((1 << s_bits) - 1)
+    lo2 = kept >> jnp.uint64(c_bits + 30 + s_bits)
+    new_src = jnp.where(dead, PAD_VERTEX, lo2.astype(jnp.int32))
+    new_dst = jnp.where(dead, PAD_VERTEX, hi2.astype(jnp.int32))
+    new_key = jnp.where(dead, INF_KEY, (wb2 << jnp.uint64(32)) | eid2)
+    new_slot = jnp.where(dead, _PAD_SLOT, eid2.astype(jnp.int32))
+    return new_src, new_dst, new_key, new_slot, count
+
+
+def _run_interval_batch(
+    comp: jnp.ndarray,      # (B, n_pad) uint32
+    mask: jnp.ndarray,      # (B, cap) bool
+    src: jnp.ndarray,       # (B, cap) int32
+    dst: jnp.ndarray,
+    key: jnp.ndarray,       # (B, cap) uint64
+    slot: jnp.ndarray,      # (B, cap) int32
+    done: jnp.ndarray,      # (B,) bool
+    rdone: jnp.ndarray,     # (B,) int32 — per-graph rounds run so far
+    rounds: jnp.ndarray,
+    *,
+    use_pallas: bool,
+    contract_bits: Optional[Tuple[int, int]],
+):
+    """Advance up to ``rounds`` Borůvka rounds for a whole graph bucket.
+
+    Every round maps :func:`_one_round` over the leading batch axis; lanes
+    whose graph has converged are frozen (their ``done`` flag gates the
+    carry update), so each lane's comp/mask/rounds trajectory is exactly the
+    single-graph engine's.  Termination for the host is the per-graph done
+    vector reduced to ONE replicated scalar (``all_done``) — the interval's
+    single readback, per the runtime contract.
+
+    When ``contract_bits = (s_bits, c_bits)`` rounds run the packed-key
+    variant (:func:`_one_round_packed`) and the interval ends with a fused
+    per-lane :func:`_contract_lane` (in place, same capacity); the returned
+    census is then the max DEDUPED edge count, so the host's next shrink
+    needs no extra readback.  Without it, rounds are plain
+    :func:`_one_round` and the census counts active slots (the fallback for
+    buckets whose packing doesn't fit 64 bits).
+    """
+    if contract_bits is not None:
+        s_bits, c_bits = contract_bits
+        step = jax.vmap(partial(_one_round_packed,
+                                s_bits=s_bits, c_bits=c_bits))
+    else:
+        step = jax.vmap(partial(_one_round, pmin=lambda x: x,
+                                use_pallas=use_pallas))
+
+    def cond(c):
+        r, _, _, done, _ = c
+        return jnp.logical_not(jnp.all(done)) & (r < rounds)
+
+    def body(c):
+        r, comp, mask, done, rdone = c
+        comp2, mask2, done2 = step(comp, mask, src, dst, key, slot)
+        live = jnp.logical_not(done)
+        comp = jnp.where(live[:, None], comp2, comp)
+        mask = jnp.where(live[:, None], mask2, mask)
+        rdone = rdone + live.astype(jnp.int32)
+        done = done | done2
+        return r + 1, comp, mask, done, rdone
+
+    r, comp, mask, done, rdone = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), comp, mask, done, rdone))
+
+    if contract_bits is not None:
+        s_bits, c_bits = contract_bits
+        src, dst, key, slot, counts = jax.vmap(
+            partial(_contract_lane, s_bits=s_bits, c_bits=c_bits))(
+                comp, src, dst, key)
+        census = counts.max()
+    else:
+        # Active-edge census (max over lanes) for the compaction cap.
+        census = jax.vmap(
+            lambda c, s, d, k: ((c[s] != c[d]) & (k != INF_KEY)).sum(
+                dtype=jnp.int32))(comp, src, dst, key).max()
+    return (comp, mask, src, dst, key, slot, done, rdone,
+            jnp.all(done), r, census)
+
+
+@functools.lru_cache(maxsize=16)
+def _build_batch_interval_fn(
+        use_pallas: bool, contract_bits: Optional[Tuple[int, int]]) -> Callable:
+    # The whole per-lane state is mutated (contraction rewrites the edge
+    # arrays too) — donate it all for in-place reuse; rounds is traced, so
+    # one executable serves every interval length per bucket shape.
+    donate = runtime.donation(0, 1, 2, 3, 4, 5, 6, 7)
+    fn = partial(_run_interval_batch, use_pallas=use_pallas,
+                 contract_bits=contract_bits)
+    return jax.jit(fn, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_batch_shrink_fn(cap: int) -> Callable:
+    """Slice every lane's (contracted, front-packed) edge arrays down to
+    ``cap`` slots — a static-shape copy, no readback needed."""
+    return jax.jit(lambda src, dst, key, slot: (
+        src[:, :cap], dst[:, :cap], key[:, :cap], slot[:, :cap]))
+
+
+@functools.lru_cache(maxsize=64)
+def _build_batch_compact_fn(cap: int) -> Callable:
+    """Per-lane stream compaction of a bucket to ``cap`` slots (vmapped
+    :func:`_compact_shard` — survivors keep their load-time ``slot``, so
+    winner recording stays a local scatter under the batch axis too)."""
+    return jax.jit(jax.vmap(partial(_compact_shard, cap=cap)))
+
+
+def _contract_gate(batch) -> Optional[Tuple[int, int]]:
+    """(s_bits, c_bits) when the bucket's contraction quadruple fits one
+    uint64 — fragment labels need ``log2(n_pad)`` bits each, weight bits 30
+    (requires every weight < 2.0, which the (0, 1) invariant gives; checked
+    against the actual keys so arbitrary host graphs stay safe), and the
+    canonical edge id ``log2(cap)``.  ``None`` falls back to plain
+    compaction (bit-identical either way, just fewer sort savings)."""
+    s_bits = max(batch.n_pad - 1, 1).bit_length()
+    c_bits = max(batch.cap - 1, 1).bit_length()
+    if 2 * s_bits + 30 + c_bits > 64:
+        return None
+    real = batch.key != INF_KEY
+    if np.any(real & ((batch.key >> np.uint64(32)) >= np.uint64(1 << 30))):
+        return None
+    return (s_bits, c_bits)
+
+
+def _solve_bucket(
+    batch,                       # pipeline.GraphBatch
+    params: GHSParams,
+    max_rounds: Optional[int],
+) -> tuple[list[ForestResult], BatchStats]:
+    """Run one shape bucket through the vmapped device round loop."""
+    n_pad, cap, B = batch.n_pad, batch.cap, batch.batch_size
+    contract_bits = (_contract_gate(batch)
+                     if params.compaction == "pow2" else None)
+
+    with enable_x64():
+        src_d = jnp.asarray(batch.src)
+        dst_d = jnp.asarray(batch.dst)
+        key_d = jnp.asarray(batch.key)
+        slot_d = jnp.asarray(batch.slot)
+        comp_dev = jnp.asarray(
+            np.broadcast_to(np.arange(n_pad, dtype=np.uint32),
+                            (B, n_pad)).copy())
+        mask_dev = jnp.zeros((B, cap), bool)
+        done_dev = jnp.zeros((B,), bool)
+        rdone_dev = jnp.zeros((B,), jnp.int32)
+
+        interval = max(params.batch_check_frequency, 1)
+        cap_rounds = max_rounds or (n_pad + 2)
+        stats = BatchStats(buckets=1, bucket_shapes=((n_pad, cap, B),))
+        history = []
+        box = dict(cur_cap=cap)
+
+        fn = _build_batch_interval_fn(params.use_pallas, contract_bits)
+
+        def dispatch(s):
+            comp, mask, src_d, dst_d, key_d, slot_d, done, rdone = s
+            this_rounds = min(interval, cap_rounds - stats.rounds)
+            state = fn(comp, mask, src_d, dst_d, key_d, slot_d, done, rdone,
+                       this_rounds)
+            # The interval's scalar summary: the per-graph done vector is
+            # already reduced on device, so the host reads ONE flag per
+            # interval no matter how many graphs ride the bucket.
+            return state[:8], state[8:]
+
+        def finish(s, vals):
+            all_done, r, census = vals
+            stats.rounds += int(r)
+            stats.edges_scanned += int(r) * box["cur_cap"] * B
+            history.append(int(census))
+            if bool(all_done):
+                return s, True
+            if params.compaction == "pow2":
+                new_cap = max(_pow2ceil(int(census)), 8)
+                if new_cap < box["cur_cap"]:   # shrink: ≤ log2 recompiles
+                    comp, mask, src_d, dst_d, key_d, slot_d, done, rdone = s
+                    if contract_bits is not None:
+                        # Contraction already packed survivors to the
+                        # front — shrinking is a static slice, no readback.
+                        cfn = _build_batch_shrink_fn(new_cap)
+                        src_d, dst_d, key_d, slot_d = cfn(
+                            src_d, dst_d, key_d, slot_d)
+                    else:
+                        cfn = _build_batch_compact_fn(new_cap)
+                        src_d, dst_d, key_d, slot_d = cfn(
+                            comp, src_d, dst_d, key_d, slot_d)
+                    s = (comp, mask, src_d, dst_d, key_d, slot_d, done,
+                         rdone)
+                    box["cur_cap"] = new_cap
+                    stats.compactions += 1
+            return s, False
+
+        state = runtime.interval_loop(
+            (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d, done_dev,
+             rdone_dev), dispatch, finish, stats=stats,
+            max_intervals=cap_rounds,
+            fail_msg="batched Borůvka engine failed to converge")
+        mask_dev, rdone_dev = state[1], state[7]
+
+        # The bucket's single final fetch: mask + per-graph round counts.
+        mask_h, rdone_h = jax.device_get((mask_dev, rdone_dev))
+        stats.host_syncs += 1
+
+    results = batch.unpack(mask_h)
+    stats.active_history = tuple(history)
+    stats.rounds_per_graph = tuple(int(x) for x in np.asarray(rdone_h))
+    return results, stats
+
+
+def minimum_spanning_forests(
+    graphs,
+    params: GHSParams = DEFAULT_PARAMS,
+    max_rounds: Optional[int] = None,
+) -> tuple[list[ForestResult], BatchStats]:
+    """Solve many graphs per dispatch (DESIGN.md §8).
+
+    Graphs are bucketed by padded shape (:func:`repro.core.pipeline.
+    pack_batch` under the ``params.batch_bucket`` policy) and each bucket
+    runs the device round loop under ``jax.vmap`` — one dispatch and one
+    scalar readback per interval for the WHOLE bucket, amortizing compile
+    and dispatch cost across the batch.  Results come back in input order
+    and every forest is bit-identical to the corresponding single-graph
+    :func:`minimum_spanning_forest` solve (same ops per lane, same packed
+    total order).
+
+    ``params.round_loop == "host"`` falls back to a loop of single-graph
+    solves (the bench baseline); the batched fast path is device-only.
+    """
+    from repro.core import pipeline as pipeline_lib
+
+    graph_list = [runtime.as_graph(g) for g in graphs]
+    for i, g in enumerate(graph_list):
+        if np.any(g.weight.view(np.uint32) == INF32):
+            raise ValueError(
+                f"graph {i}: weights collide with the INF sentinel")
+
+    # Bucket + validate FIRST: the batch_bucket policy and the
+    # batch_max_vertices/batch_max_edges capacity guards must reject bad
+    # inputs on every loop driver, not just the vmapped fast path.
+    batches = pipeline_lib.pack_batch(
+        graph_list, bucket=params.batch_bucket,
+        max_vertices=params.batch_max_vertices or None,
+        max_edges=params.batch_max_edges or None)
+
+    if runtime.resolve_round_loop(params.round_loop) == "host":
+        stats = BatchStats()
+        results = []
+        rounds = []
+        for g in graph_list:
+            res, st = _host_engine(g, params, None, max_rounds)
+            results.append(res)
+            rounds.append(st.rounds)
+            stats.merge(st)
+        stats.rounds_per_graph = tuple(rounds)
+        return results, stats
+
+    results: list = [None] * len(graph_list)
+    rounds = [0] * len(graph_list)
+    stats = BatchStats()
+    shapes = []
+    for batch in batches:
+        bres, bst = _solve_bucket(batch, params, max_rounds)
+        for idx, res, r in zip(batch.indices, bres, bst.rounds_per_graph):
+            results[idx] = res
+            rounds[idx] = r
+        stats.merge(bst)
+        shapes.extend(bst.bucket_shapes)
+    stats.buckets = len(batches)
+    stats.bucket_shapes = tuple(shapes)
+    stats.rounds_per_graph = tuple(rounds)
+    return results, stats
 
 
 # ---------------------------------------------------------------------------

@@ -623,9 +623,24 @@ def _build_interval_fn(topo: GHSTopology, params: GHSParams,
 # Drivers (both route through repro.core.runtime.interval_loop)
 # ---------------------------------------------------------------------------
 
+_ERR_DESCRIPTIONS = (
+    (ERR_QUEUE_OVERFLOW,
+     "ERR_QUEUE_OVERFLOW: a message ring exceeded its capacity — raise "
+     "params.queue_capacity (or leave it 0 to auto-size from the shard "
+     "adjacency)"),
+    (ERR_HASH_MISS,
+     "ERR_HASH_MISS: edge hash lookup failed (hash table too small — raise "
+     "params.hash_table_factor)"),
+    (ERR_LOGIC,
+     "ERR_LOGIC: protocol invariant violated (engine bug)"),
+)
+
+
 def _raise_on_err(err: int):
     if err:
-        raise RuntimeError(f"GHS engine error flags: {err:#x}")
+        what = "; ".join(d for flag, d in _ERR_DESCRIPTIONS if err & flag)
+        raise RuntimeError(
+            f"GHS engine error flags: {err:#x} ({what or 'unknown flag'})")
 
 
 def _device_driver(state, topo, params, mesh, stats, total_cap: int):

@@ -56,3 +56,36 @@ def minimum_spanning_forest(
         raise ValueError(
             f"unknown method {method!r}; options: {METHODS}") from None
     return engine(graph, params=params, mesh=mesh, **kw)
+
+
+def minimum_spanning_forests(
+    graphs,
+    method: str = "boruvka",
+    params: GHSParams = DEFAULT_PARAMS,
+    max_rounds=None,
+) -> tuple[list, runtime.EngineStats]:
+    """Compute minimum spanning forests for MANY graphs at once.
+
+    The batched serving path (DESIGN.md §8): graphs are bucketed by padded
+    shape (``params.batch_bucket`` policy, capacity-guarded by
+    ``params.batch_max_vertices`` / ``batch_max_edges``) and each bucket
+    runs the Borůvka round loop under ``jax.vmap`` — one dispatch and one
+    scalar readback per interval for the whole bucket, instead of one
+    engine invocation per graph.  Returns ``(forests, stats)`` with
+    ``forests`` in input order; each forest is bit-identical to the
+    single-graph :func:`minimum_spanning_forest` solve of the same graph
+    (and to the Kruskal oracle), and ``stats.rounds_per_graph`` carries the
+    per-graph round counts.
+
+    Only the Borůvka engine has a batched fast path; ``method="ghs"``
+    raises (the message-driven engine is served one graph at a time).
+    ``params.round_loop == "host"`` falls back to a loop of single solves
+    — the measured baseline of ``benchmarks/bench_batched.py``.
+    """
+    if method != "boruvka":
+        raise ValueError(
+            f"batched solving supports method='boruvka' only, got "
+            f"{method!r}; solve GHS queries one graph at a time via "
+            f"minimum_spanning_forest")
+    return boruvka_dist.minimum_spanning_forests(
+        graphs, params=params, max_rounds=max_rounds)

@@ -58,6 +58,23 @@ class GHSParams:
                                       #   interval, both engines)
                                       # 'host': legacy per-round / per-superstep
                                       #   host loop
+    # Batched solving knobs (DESIGN.md §8) — minimum_spanning_forests only.
+    batch_bucket: str = "pow2"        # pack_batch shape-bucketing policy:
+                                      # 'pow2' rounds (n, m) up to powers of
+                                      #   two so mixed sizes share executables
+                                      # 'exact' buckets identical shapes only
+    batch_max_vertices: int = 0       # per-graph capacity bounds for the
+    batch_max_edges: int = 0          # batched path; 0 = unlimited, otherwise
+                                      # pack_batch REJECTS oversized graphs
+                                      # (ValueError), never truncates them
+    batch_check_frequency: int = 1    # rounds per batched interval.  The
+                                      # batched loop trades differently from
+                                      # the single-graph one: its readback
+                                      # amortizes over the whole bucket while
+                                      # per-interval contraction shrinks every
+                                      # subsequent round, so SHORT intervals
+                                      # win (single-graph check_frequency is
+                                      # untouched)
 
 
 DEFAULT_PARAMS = GHSParams()

@@ -217,6 +217,31 @@ def build_edge_layout(
     return EdgeLayout(num_shards=num_shards, block=block, eid=eid)
 
 
+def identity_layout(num_edges: int, cap: int) -> EdgeLayout:
+    """Single-shard layout whose slot *i* IS canonical edge *i*.
+
+    This is the layout of every lane of a packed graph batch (DESIGN.md
+    §8): edges are loaded in canonical order, the tail ≥ ``num_edges`` is
+    padding — so a lane's winner bitmap maps back to canonical ids through
+    the same :meth:`EdgeLayout.canonical_mask` path as the sharded engines.
+    """
+    eid = np.full(cap, -1, dtype=np.int64)
+    eid[:num_edges] = np.arange(num_edges, dtype=np.int64)
+    return EdgeLayout(num_shards=1, block=cap, eid=eid)
+
+
+def batched_slots(batch_size: int, cap: int) -> np.ndarray:
+    """(B, cap) int32 slot side-lane for a packed graph batch.
+
+    Each lane carries its own slot index (the batched analogue of
+    :class:`repro.core.runtime.EdgeBundle`'s per-shard ``slot`` lane), so
+    tree-edge recording stays a local scatter under the batch axis and
+    survives per-lane compaction exactly as it does per-shard.
+    """
+    return np.broadcast_to(
+        np.arange(cap, dtype=np.int32), (batch_size, cap)).copy()
+
+
 def relabel_graph(graph: Graph, perm: np.ndarray) -> Graph:
     """Apply a vertex relabeling WITHOUT touching edge order or weights.
 

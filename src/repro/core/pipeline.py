@@ -296,6 +296,135 @@ class DeviceEdges:
         return self._host_graph
 
 
+# ---------------------------------------------------------------------------
+# Batched packing (DESIGN.md §8) — many graphs per engine dispatch
+# ---------------------------------------------------------------------------
+
+BATCH_BUCKETS = ("pow2", "exact")
+
+
+@dataclasses.dataclass
+class GraphBatch:
+    """One shape bucket of a packed multi-graph batch.
+
+    All lanes share the padded shape ``(n_pad, cap)``: lane *r* holds graph
+    ``graphs[r]`` (position ``indices[r]`` of the original sequence) with
+    its canonical edges in slots ``[0, num_edges[r])`` and the inert padding
+    sentinels behind them (``PAD_VERTEX`` endpoints, ``INF_KEY`` keys — the
+    same invariants as single-graph padding, see :mod:`repro.core.graph`).
+    Vertices ``[num_vertices[r], n_pad)`` are padding too: they own no edges,
+    so they stay isolated fragments and never touch the forest.  ``slot`` is
+    the per-lane slot side-lane (:func:`repro.core.partition.batched_slots`).
+    """
+
+    indices: tuple                  # positions in the caller's sequence
+    graphs: tuple                   # the bucket's Graph objects, lane order
+    n_pad: int
+    cap: int
+    num_vertices: np.ndarray        # (B,) int64
+    num_edges: np.ndarray           # (B,) int64
+    src: np.ndarray                 # (B, cap) int32
+    dst: np.ndarray                 # (B, cap) int32
+    key: np.ndarray                 # (B, cap) uint64
+    slot: np.ndarray                # (B, cap) int32
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.indices)
+
+    def unpack(self, mask_batch) -> list:
+        """Per-lane :class:`~repro.core.kruskal_ref.ForestResult` list from
+        a (B, cap) winner bitmap — ONE blocking device→host transfer for
+        the whole bucket, however many graphs ride it."""
+        import jax
+        from repro.core import partition as partition_lib
+        from repro.core import runtime as runtime_lib
+        masks = np.asarray(jax.device_get(mask_batch), dtype=bool)
+        out = []
+        for r, g in enumerate(self.graphs):
+            m = int(self.num_edges[r])
+            layout = partition_lib.identity_layout(m, self.cap)
+            canon = layout.canonical_mask(masks[r], m)
+            res = runtime_lib.forest_from_mask(g, canon)
+            res.check_consistent(g.num_vertices)
+            out.append(res)
+        return out
+
+
+def _bucket_shape(n: int, m: int, bucket: str) -> Tuple[int, int]:
+    """Padded (n_pad, cap) for one graph under a bucketing policy."""
+    from repro.core.partition import pow2ceil
+    if bucket == "pow2":
+        return pow2ceil(max(n, 1)), pow2ceil(max(m, 8))
+    return max(n, 1), max(m, 1)
+
+
+def pack_batch(
+    graphs,
+    *,
+    bucket: str = "pow2",
+    max_vertices: Optional[int] = None,
+    max_edges: Optional[int] = None,
+) -> list:
+    """Bucket ``graphs`` by padded shape and pack each bucket into
+    leading-axis-stacked arrays ready for the vmapped engine.
+
+    ``bucket`` — ``"pow2"`` (default) rounds each graph's (n, m) up to
+    powers of two so mixed sizes share executables; ``"exact"`` buckets
+    only graphs with identical (n, m) together (no per-graph padding, one
+    executable per distinct shape).  Graphs never share a bucket unless
+    their padded shapes match exactly, so no lane is ever solved at the
+    wrong rank.
+
+    ``max_vertices`` / ``max_edges`` bound the padded lane shape; a graph
+    exceeding either capacity raises ``ValueError`` (the serving-path
+    guard: an oversized query must be rejected, not silently truncated).
+    """
+    from repro.core import partition as partition_lib
+
+    if bucket not in BATCH_BUCKETS:
+        raise ValueError(
+            f"unknown batch bucket policy {bucket!r}; options: "
+            f"{BATCH_BUCKETS}")
+    graph_list = list(graphs)
+    buckets: dict = {}
+    for i, g in enumerate(graph_list):
+        n, m = g.num_vertices, g.num_edges
+        if max_vertices is not None and n > max_vertices:
+            raise ValueError(
+                f"graph {i} exceeds pack_batch capacity: num_vertices={n} "
+                f"> max_vertices={max_vertices}")
+        if max_edges is not None and m > max_edges:
+            raise ValueError(
+                f"graph {i} exceeds pack_batch capacity: num_edges={m} "
+                f"> max_edges={max_edges}")
+        buckets.setdefault(_bucket_shape(n, m, bucket), []).append(i)
+
+    out = []
+    for (n_pad, cap), idxs in sorted(buckets.items()):
+        bsz = len(idxs)
+        src = np.full((bsz, cap), PAD_VERTEX, np.int32)
+        dst = np.full((bsz, cap), PAD_VERTEX, np.int32)
+        key = np.full((bsz, cap), keys_lib.INF_KEY, np.uint64)
+        for r, i in enumerate(idxs):
+            g = graph_list[i]
+            m = g.num_edges
+            src[r, :m] = g.src
+            dst[r, :m] = g.dst
+            key[r, :m] = g.packed_keys
+        out.append(GraphBatch(
+            indices=tuple(idxs),
+            graphs=tuple(graph_list[i] for i in idxs),
+            n_pad=n_pad, cap=cap,
+            num_vertices=np.array(
+                [graph_list[i].num_vertices for i in idxs], np.int64),
+            num_edges=np.array(
+                [graph_list[i].num_edges for i in idxs], np.int64),
+            src=src, dst=dst, key=key,
+            slot=partition_lib.batched_slots(bsz, cap)))
+    return out
+
+
 def _capacity(spec: GraphSpec, num_shards: int) -> int:
     """Power-of-two capacity ≥ num_samples, divisible by the shard count."""
     from repro.core.partition import pow2ceil

@@ -62,10 +62,15 @@ class EngineStats:
     driver dispatches — for a device-resident loop that is one per
     ``check_frequency`` steps; for a legacy host loop it equals the number
     of rounds/supersteps.
+
+    ``rounds_per_graph`` is filled by batched drivers (DESIGN.md §8): one
+    round/superstep count per input graph, in input order.  Single-graph
+    engines leave it empty.
     """
 
     host_syncs: int = 0
     intervals: int = 0
+    rounds_per_graph: tuple = ()
 
 
 def donation(*argnums: int) -> Tuple[int, ...]:
@@ -91,6 +96,12 @@ def interval_loop(
     ``finish(state, host_scalars) -> (state, done)`` interprets the fetched
     values: it raises on error flags, updates engine counters, may mutate
     the state (e.g. compaction re-dispatch), and reports termination.
+
+    The contract is batch-rank-polymorphic: a dispatch may advance a whole
+    graph bucket (state with a leading batch axis), in which case per-graph
+    done flags must be reduced ON DEVICE to one scalar before they reach
+    the summary — the driver still performs exactly one readback per
+    interval regardless of batch size (DESIGN.md §8).
 
     Raises ``RuntimeError(fail_msg)`` if ``max_intervals`` elapse without
     ``finish`` signalling done.

@@ -1,0 +1,245 @@
+"""Batched multi-graph engine (DESIGN.md §8): every lane oracle-exact and
+bit-identical to its single-graph solve, bucketing never mixes shapes, and
+the negative paths (over-capacity packs, unknown knobs) reject loudly."""
+import numpy as np
+import pytest
+
+from repro.core import generators, kruskal_ref, pipeline, runtime
+from repro.core.graph import PAD_VERTEX, preprocess
+from repro.core.keys import INF_KEY
+from repro.core.mst_api import minimum_spanning_forest, \
+    minimum_spanning_forests
+from repro.core.params import GHSParams
+
+
+def _single_edge(n=2, w=0.5):
+    return preprocess(np.array([0]), np.array([1]),
+                      np.array([w], np.float32), n)
+
+
+def _edgeless(n=6):
+    return preprocess(np.zeros(0), np.zeros(0), np.zeros(0, np.float32), n)
+
+
+def _mixed_batch():
+    """Mixed kinds, scales, AND degenerate shapes — several buckets."""
+    return [
+        generators.generate("rmat", 7, seed=1),
+        generators.generate("random", 8, seed=2),
+        generators.generate("rmat", 7, seed=3),       # same bucket as [0]
+        generators.generate("disconnected", 6, seed=4),
+        _edgeless(),
+        _single_edge(),
+        generators.generate("rmat", 6, seed=5),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: oracle-exact + bit-identical to single-graph solves
+# ---------------------------------------------------------------------------
+
+def test_batched_oracle_exact_and_bit_identical_to_single():
+    graphs = _mixed_batch()
+    results, stats = minimum_spanning_forests(graphs)
+    assert len(results) == len(graphs)
+    assert len(stats.rounds_per_graph) == len(graphs)
+    for i, (g, got) in enumerate(zip(graphs, results)):
+        want = kruskal_ref.kruskal(g)
+        single, st_single = minimum_spanning_forest(g, method="boruvka")
+        assert np.array_equal(got.edge_mask, want.edge_mask), i
+        assert np.array_equal(got.edge_mask, single.edge_mask), i
+        assert got.total_weight == single.total_weight, i
+        assert got.num_components == want.num_components, i
+        # the lane ran exactly the rounds the single-graph engine ran
+        assert stats.rounds_per_graph[i] == st_single.rounds, i
+
+
+def test_batched_sync_contract():
+    """One readback per interval + ONE final fetch per bucket — host syncs
+    must not scale with the number of graphs in a bucket."""
+    graphs = _mixed_batch()
+    _, stats = minimum_spanning_forests(graphs)
+    assert stats.buckets >= 2                  # mixed shapes → real buckets
+    assert stats.intervals >= stats.buckets
+    assert stats.host_syncs == stats.intervals + stats.buckets
+
+
+def test_batched_compaction_bit_identical():
+    """Per-lane pow2 compaction every interval leaves every forest
+    bit-identical (the batched analogue of the single-graph contract)."""
+    graphs = [generators.generate("rmat", 8, seed=s) for s in (1, 2, 3)]
+    plain, st_p = minimum_spanning_forests(
+        graphs, params=GHSParams(compaction="none"))
+    compacted, st_c = minimum_spanning_forests(
+        graphs, params=GHSParams(compaction="pow2", batch_check_frequency=1))
+    assert st_c.compactions >= 1, "compaction path was not exercised"
+    for a, b, g in zip(plain, compacted, graphs):
+        want = kruskal_ref.kruskal(g)
+        assert np.array_equal(a.edge_mask, want.edge_mask)
+        assert np.array_equal(b.edge_mask, want.edge_mask)
+
+
+def test_batched_host_loop_fallback_matches_device():
+    graphs = _mixed_batch()
+    dev, st_d = minimum_spanning_forests(
+        graphs, params=GHSParams(round_loop="device"))
+    host, st_h = minimum_spanning_forests(
+        graphs, params=GHSParams(round_loop="host"))
+    for a, b in zip(dev, host):
+        assert np.array_equal(a.edge_mask, b.edge_mask)
+        assert a.total_weight == b.total_weight
+    assert st_d.rounds_per_graph == st_h.rounds_per_graph
+
+
+def test_batched_device_edges_input():
+    """DeviceEdges from the pipeline are accepted (host-mirrored for
+    packing) and solve bit-identically."""
+    spec = pipeline.GraphSpec("geo_knn", 7, seed=1)
+    dev = pipeline.build(spec)
+    host = pipeline.build_host(spec)
+    want = kruskal_ref.kruskal(host)
+    results, _ = minimum_spanning_forests([dev, host])
+    assert np.array_equal(results[0].edge_mask, want.edge_mask)
+    assert np.array_equal(results[1].edge_mask, want.edge_mask)
+
+
+def test_batched_fallback_without_contraction_packing():
+    """Buckets whose (fragment, weight, id) packing cannot fit one uint64
+    — weights outside (0, 2), or 2·log2(n_pad) + 30 + log2(cap) > 64 —
+    fall back to the plain vmapped round + compaction and must stay
+    bit-identical to single solves and the oracle."""
+    from repro.core.boruvka_dist import _contract_gate
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, 64, 400)
+    dst = rng.integers(0, 64, 400)
+    w_wide = (rng.random(400, dtype=np.float32) * 3 + 0.5).astype(np.float32)
+    g_wide = preprocess(src, dst, w_wide, 64)          # weights ≥ 2.0
+    n = 1 << 12
+    src = rng.integers(0, n, 1600)
+    dst = rng.integers(0, n, 1600)
+    w_big = rng.random(1600, dtype=np.float32) * 0.9 + 0.05
+    g_big = preprocess(src, dst, w_big, n)             # 2s + 30 + c = 65
+    for g in (g_wide, g_big):
+        (batch,) = pipeline.pack_batch([g])
+        assert _contract_gate(batch) is None
+        want = kruskal_ref.kruskal(g)
+        single, st_single = minimum_spanning_forest(g, method="boruvka")
+        (got,), stats = minimum_spanning_forests([g])
+        assert np.array_equal(got.edge_mask, want.edge_mask)
+        assert np.array_equal(got.edge_mask, single.edge_mask)
+        assert stats.rounds_per_graph == (st_single.rounds,)
+
+
+def test_batched_empty_input():
+    results, stats = minimum_spanning_forests([])
+    assert results == []
+    assert stats.buckets == 0 and stats.host_syncs == 0
+
+
+# ---------------------------------------------------------------------------
+# Bucketing: shapes never mix, padding invariants hold
+# ---------------------------------------------------------------------------
+
+def test_bucketing_never_mixes_shapes():
+    graphs = _mixed_batch()
+    batches = pipeline.pack_batch(graphs)
+    seen = sorted(i for b in batches for i in b.indices)
+    assert seen == list(range(len(graphs)))    # a partition of the input
+    from repro.core.partition import pow2ceil
+    for b in batches:
+        for r, g in enumerate(b.graphs):
+            assert graphs[b.indices[r]] is g
+            # every lane's padded shape IS the bucket shape
+            assert pow2ceil(max(g.num_vertices, 1)) == b.n_pad
+            assert pow2ceil(max(g.num_edges, 8)) == b.cap
+        assert b.src.shape == b.dst.shape == b.key.shape == \
+            b.slot.shape == (b.batch_size, b.cap)
+    shapes = [(b.n_pad, b.cap) for b in batches]
+    assert len(set(shapes)) == len(shapes)     # one bucket per shape
+
+
+def test_pack_batch_padding_invariants():
+    graphs = [_single_edge(), generators.generate("rmat", 6, seed=7)]
+    for b in pipeline.pack_batch(graphs):
+        for r, g in enumerate(b.graphs):
+            m = g.num_edges
+            assert np.array_equal(b.src[r, :m], g.src)
+            assert np.array_equal(b.dst[r, :m], g.dst)
+            assert np.array_equal(b.key[r, :m], g.packed_keys)
+            # padding tail: inert sentinels, never electable
+            assert np.all(b.src[r, m:] == PAD_VERTEX)
+            assert np.all(b.dst[r, m:] == PAD_VERTEX)
+            assert np.all(b.key[r, m:] == INF_KEY)
+            assert np.array_equal(b.slot[r], np.arange(b.cap))
+
+
+def test_pack_batch_exact_policy_groups_identical_shapes_only():
+    graphs = [generators.generate("rmat", 7, seed=1),
+              generators.generate("rmat", 7, seed=2),
+              generators.generate("rmat", 6, seed=3)]
+    batches = pipeline.pack_batch(graphs, bucket="exact")
+    # rmat graphs with different seeds dedup to different edge counts →
+    # exact bucketing may not merge them; shapes must match exactly inside
+    for b in batches:
+        for g in b.graphs:
+            assert g.num_vertices == b.n_pad
+            assert g.num_edges == b.cap
+    res, _ = minimum_spanning_forests(
+        graphs, params=GHSParams(batch_bucket="exact"))
+    for g, got in zip(graphs, res):
+        assert np.array_equal(got.edge_mask,
+                              kruskal_ref.kruskal(g).edge_mask)
+
+
+# ---------------------------------------------------------------------------
+# Negative paths
+# ---------------------------------------------------------------------------
+
+def test_pack_batch_rejects_over_capacity_graphs():
+    big = generators.generate("rmat", 8, seed=1)
+    small = _single_edge()
+    with pytest.raises(ValueError, match="exceeds pack_batch capacity"):
+        pipeline.pack_batch([small, big], max_edges=64)
+    with pytest.raises(ValueError,
+                       match=r"graph 1 .*num_vertices=256 > max_vertices=64"):
+        pipeline.pack_batch([small, big], max_vertices=64)
+    # end to end through the params knobs — on BOTH loop drivers (the host
+    # fallback must not bypass the serving-path capacity guard)
+    for loop in ("device", "host"):
+        with pytest.raises(ValueError, match="exceeds pack_batch capacity"):
+            minimum_spanning_forests(
+                [big],
+                params=GHSParams(batch_max_edges=8, round_loop=loop))
+
+
+def test_pack_batch_rejects_unknown_bucket_policy():
+    with pytest.raises(ValueError, match="unknown batch bucket policy"):
+        pipeline.pack_batch([_single_edge()], bucket="golf")
+    with pytest.raises(ValueError, match="unknown batch bucket policy"):
+        minimum_spanning_forests(
+            [_single_edge()], params=GHSParams(batch_bucket="golf"))
+
+
+def test_resolve_round_loop_rejects_unknown_modes():
+    with pytest.raises(ValueError, match="unknown round_loop"):
+        runtime.resolve_round_loop("warp")
+    g = _single_edge()
+    # both the single-graph and the batched entry validate the knob
+    with pytest.raises(ValueError, match="unknown round_loop"):
+        minimum_spanning_forest(
+            g, method="boruvka", params=GHSParams(round_loop="warp"))
+    with pytest.raises(ValueError, match="unknown round_loop"):
+        minimum_spanning_forests([g], params=GHSParams(round_loop="warp"))
+
+
+def test_batched_ghs_method_rejected():
+    with pytest.raises(ValueError, match="method='boruvka'"):
+        minimum_spanning_forests([_single_edge()], method="ghs")
+
+
+def test_batched_inf_sentinel_weights_rejected():
+    bad = preprocess(
+        np.array([0]), np.array([1]),
+        np.array([np.uint32(0xFFFFFFFF)]).view(np.float32), 2)
+    with pytest.raises(ValueError, match="INF sentinel"):
+        minimum_spanning_forests([bad])

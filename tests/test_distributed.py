@@ -97,9 +97,10 @@ print(json.dumps(rows))
 
 def test_ghs_queue_overflow_raises():
     """ERR_QUEUE_OVERFLOW surfaces as a RuntimeError on both drivers —
-    never a silently wrong forest.  A cross-shard star floods shard 0's
-    rings when the capacity override is small; the same graph converges
-    bit-identically at the default (auto-sized) capacity."""
+    never a silently wrong forest — and the message NAMES the flag and the
+    knob that fixes it (not just a bare hex code).  A cross-shard star
+    floods shard 0's rings when the capacity override is small; the same
+    graph converges bit-identically at the default (auto-sized) capacity."""
     out = run_child("""
 import numpy as np, json
 from repro.compat import make_mesh
@@ -115,15 +116,15 @@ dst = np.arange(1, n, dtype=np.int64)
 rng = np.random.default_rng(0)
 w = rng.random(n - 1, dtype=np.float32) * 0.9 + 0.05
 g = preprocess(src, dst, w, n)
-res = dict(raised={}, ok={})
+res = dict(msg={}, ok={})
 for loop in ("device", "host"):
     try:
         minimum_spanning_forest(
             g, mesh=mesh,
             params=GHSParams(queue_capacity=160, round_loop=loop))
-        res["raised"][loop] = False
+        res["msg"][loop] = ""
     except RuntimeError as e:
-        res["raised"][loop] = "error flags" in str(e)
+        res["msg"][loop] = str(e)
     got, _ = minimum_spanning_forest(
         g, mesh=mesh, params=GHSParams(round_loop=loop))
     res["ok"][loop] = bool(np.array_equal(
@@ -131,7 +132,11 @@ for loop in ("device", "host"):
 print(json.dumps(res))
 """, devices=2)
     rec = json.loads(out.strip().splitlines()[-1])
-    assert rec["raised"] == {"device": True, "host": True}
+    for loop in ("device", "host"):
+        msg = rec["msg"][loop]
+        assert "error flags" in msg, (loop, msg)
+        assert "ERR_QUEUE_OVERFLOW" in msg, (loop, msg)
+        assert "queue_capacity" in msg, (loop, msg)
     assert rec["ok"] == {"device": True, "host": True}
 
 

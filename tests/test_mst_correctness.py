@@ -182,6 +182,85 @@ def test_ghs_history_device_matches_host():
     assert sd.bytes_history[-1] == sd.bytes_remote
 
 
+# ---------------------------------------------------------------------------
+# Adversarial corpus: the degenerate inputs generators rarely emit.  Every
+# case runs through BOTH engines (the Borůvka engine under both loop
+# drivers) and the Kruskal oracle, edge-set-exactly.
+# ---------------------------------------------------------------------------
+
+def _adversarial_corpus():
+    from repro.core.graph import preprocess
+    rng = np.random.default_rng(42)
+
+    # Self-loops: every vertex loops on itself, plus a sparse real graph —
+    # §3.1 must drop every loop and the engines must agree on the rest.
+    n = 64
+    loops = np.arange(n)
+    src = np.concatenate([loops, rng.integers(0, n, 160)])
+    dst = np.concatenate([loops, rng.integers(0, n, 160)])
+    w = rng.random(src.size, dtype=np.float32) * 0.9 + 0.05
+    yield "self-loops", preprocess(src, dst, w, n)
+
+    # Duplicate / parallel edges: every pair sampled many times in both
+    # directions with different weights — dedup must keep the min copy and
+    # the forest must be built over the deduped canonical ids.
+    base_u = rng.integers(0, 32, 48)
+    base_v = rng.integers(0, 32, 48)
+    src = np.tile(np.concatenate([base_u, base_v]), 4)
+    dst = np.tile(np.concatenate([base_v, base_u]), 4)
+    w = rng.random(src.size, dtype=np.float32) * 0.9 + 0.05
+    yield "parallel-edges", preprocess(src, dst, w, 32)
+
+    # All-equal weights: the election is decided ENTIRELY by the canonical
+    # edge-id lane of the packed key (C6 tie-break).
+    src = rng.integers(0, 48, 300)
+    dst = rng.integers(0, 48, 300)
+    w = np.full(300, np.float32(0.5))
+    yield "all-equal-weights", preprocess(src, dst, w, 48)
+
+    # Fully disconnected vertex set: no edges at all — the forest is empty
+    # and every vertex is its own component.
+    yield "no-edges", preprocess(
+        np.zeros(0), np.zeros(0), np.zeros(0, np.float32), 37)
+
+    # Single-edge graph (plus isolated vertices): one tree edge, n-1
+    # components.
+    yield "single-edge", preprocess(
+        np.array([2]), np.array([5]), np.array([0.25], np.float32), 9)
+
+
+@pytest.mark.parametrize(
+    "name,g", list(_adversarial_corpus()),
+    ids=[name for name, _ in _adversarial_corpus()])
+def test_adversarial_corpus_both_engines_exact(name, g):
+    want = kruskal_ref.kruskal(g)
+    for params in (GHSParams(round_loop="device"),
+                   GHSParams(round_loop="host")):
+        got, _ = minimum_spanning_forest(g, method="boruvka", params=params)
+        assert np.array_equal(got.edge_mask, want.edge_mask), \
+            (name, params.round_loop)
+        assert got.num_components == want.num_components
+        assert got.total_weight == want.total_weight
+    got, _ = minimum_spanning_forest(g, method="ghs")
+    assert np.array_equal(got.edge_mask, want.edge_mask), name
+    assert got.num_components == want.num_components
+
+
+def test_adversarial_corpus_batched_exact():
+    """The whole corpus as ONE mixed batch: every lane oracle-exact and
+    bit-identical to its single-graph solve."""
+    from repro.core.mst_api import minimum_spanning_forests
+    names, graphs = zip(*_adversarial_corpus())
+    results, stats = minimum_spanning_forests(list(graphs))
+    assert len(stats.rounds_per_graph) == len(graphs)
+    for name, g, got in zip(names, graphs, results):
+        want = kruskal_ref.kruskal(g)
+        single, _ = minimum_spanning_forest(g, method="boruvka")
+        assert np.array_equal(got.edge_mask, want.edge_mask), name
+        assert np.array_equal(got.edge_mask, single.edge_mask), name
+        assert got.num_components == want.num_components, name
+
+
 def test_padding_inert_when_vertex0_isolated():
     """Regression for the _pad_pow2 fill bug class: padding edges must be
     self-loops by construction.  Vertex 0 has no incident edges; if padded

@@ -44,6 +44,87 @@ def test_ghs_forest_invariants(g):
     assert np.array_equal(got.edge_mask, want.edge_mask)
 
 
+# ---------------------------------------------------------------------------
+# Metamorphic invariants (DESIGN.md §8 correctness suite)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=2, max_value=40),
+       st.integers(min_value=0, max_value=160))
+def test_forest_weight_invariant_under_edge_permutation(seed, n, m):
+    """Permuting the RAW sample order changes nothing the solver can see:
+    the preprocessed canonical graph is pid-sorted, so the forest's weight
+    multiset, tree size, and component count are invariant (under ties the
+    chosen pairs may differ between two valid MSTs, but by the matroid
+    exchange property the sorted weight sequence cannot)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    # coarse weights → dense ties, the hard case for this invariant
+    w = rng.choice(np.asarray([0.125, 0.25, 0.5, 0.75], np.float32), m)
+    perm = rng.permutation(m)
+    g1 = preprocess(src, dst, w, n)
+    g2 = preprocess(src[perm], dst[perm], w[perm], n)
+    r1, _ = minimum_spanning_forest(g1, method="boruvka")
+    r2, _ = minimum_spanning_forest(g2, method="boruvka")
+    assert r1.num_components == r2.num_components
+    assert r1.num_tree_edges == r2.num_tree_edges
+    assert np.array_equal(
+        np.sort(g1.weight[r1.edge_mask].view(np.uint32)),
+        np.sort(g2.weight[r2.edge_mask].view(np.uint32)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.sampled_from([np.float32(0.5), np.float32(0.25)]))
+def test_forest_invariant_under_monotone_weight_remap(g, factor):
+    """Scaling every weight by an exact power of two is strictly monotone
+    and injective on float32, so the elected edge SET is bit-identical
+    (same packed-key order, same tie-breaks)."""
+    from repro.core.graph import Graph
+    g2 = Graph(num_vertices=g.num_vertices, src=g.src, dst=g.dst,
+               weight=(g.weight * factor).astype(np.float32))
+    r1, _ = minimum_spanning_forest(g, method="boruvka")
+    r2, _ = minimum_spanning_forest(g2, method="boruvka")
+    assert np.array_equal(r1.edge_mask, r2.edge_mask)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(),
+       st.sampled_from(["block", "hashed", "balanced"]),
+       st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=4))
+def test_forest_invariant_under_vertex_relabeling(g, part_name, seed, shards):
+    """Vertex relabeling composed with a partitioner relabeling preserves
+    canonical edge ids (partition.relabel_graph contract), so the forest —
+    recorded BY canonical id — is bit-identical however vertices are
+    renamed."""
+    from repro.core.partition import get_partitioner, relabel_graph
+    perm_part = get_partitioner(part_name).vertex_perm(g, shards)
+    rng = np.random.default_rng(seed)
+    perm_rand = rng.permutation(g.num_vertices)
+    relabeled = relabel_graph(relabel_graph(g, perm_part), perm_rand)
+    r1, _ = minimum_spanning_forest(g, method="boruvka")
+    r2, _ = minimum_spanning_forest(relabeled, method="boruvka")
+    assert np.array_equal(r1.edge_mask, r2.edge_mask)
+    assert r1.num_components == r2.num_components
+    assert r1.total_weight == r2.total_weight
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(graphs(), min_size=1, max_size=5))
+def test_batched_solve_matches_singles(gs):
+    """Any mix of property-generated graphs solves identically batched or
+    one at a time (DESIGN.md §8 bit-identity contract)."""
+    from repro.core.mst_api import minimum_spanning_forests
+    batched, stats = minimum_spanning_forests(gs)
+    assert len(stats.rounds_per_graph) == len(gs)
+    for i, (g, got) in enumerate(zip(gs, batched)):
+        single, st_single = minimum_spanning_forest(g, method="boruvka")
+        assert np.array_equal(got.edge_mask, single.edge_mask), i
+        assert stats.rounds_per_graph[i] == st_single.rounds, i
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(min_value=0, max_value=2**31 - 1),
        st.integers(min_value=2, max_value=24),

@@ -1,0 +1,245 @@
+"""Election-kernel benchmark: fused round body vs the XLA scatter chain.
+
+Measures the Borůvka device loop with ``round_kernel="pallas"`` (fused
+masked min-plus election + n-scale recording/hooking + fused shortcut —
+DESIGN.md §9) against ``round_kernel="xla"`` (the per-edge scatter/gather
+chain), per round and end-to-end, on the same graph.  Both paths must stay
+bit-identical to the Kruskal oracle — here, across a 1/2/4-shard subprocess
+sweep, and on the batched path — so the speedup can never be bought with a
+different forest.
+
+A separate small-scale leg drives the actual Pallas kernels in interpret
+mode (``use_pallas=True``): interpret mode is a semantics check, not a perf
+path, so it is reported informationally and only its correctness is
+asserted.
+
+Emits ``BENCH_election_kernel.json`` next to the repo root (or ``--out``).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_election_kernel.py --scale 13
+    PYTHONPATH=src python benchmarks/bench_election_kernel.py --scale 10 \
+        --repeats 1 --shards 1,2 --kernel-scale 8     # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from common import pin_backend
+
+_SWEEP_CHILD = r"""
+import json, sys
+import numpy as np
+from repro.compat import make_mesh
+from repro.core import generators, kruskal_ref
+from repro.core.boruvka_dist import minimum_spanning_forest
+from repro.core.params import GHSParams
+
+kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+g = generators.generate(kind, scale, seed=1)
+want = kruskal_ref.kruskal(g)
+rows, masks = [], {}
+for rk in ("xla", "pallas"):
+    res, st = minimum_spanning_forest(
+        g, params=GHSParams(round_kernel=rk), mesh=mesh)
+    masks[rk] = res.edge_mask
+    rows.append(dict(
+        kind=kind, shards=shards, round_kernel=rk,
+        ok=bool(np.array_equal(res.edge_mask, want.edge_mask)
+                and res.total_weight == want.total_weight),
+        total_weight=res.total_weight, rounds=st.rounds,
+        host_syncs=st.host_syncs))
+for r in rows:
+    r["kernels_agree"] = bool(np.array_equal(masks["xla"], masks["pallas"]))
+print(json.dumps(rows))
+"""
+
+
+def _time_engine(g, params, repeats: int):
+    from repro.core.boruvka_dist import minimum_spanning_forest
+    minimum_spanning_forest(g, params=params)            # warm / compile
+    best, res, st = float("inf"), None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res, st = minimum_spanning_forest(g, params=params)
+        best = min(best, time.perf_counter() - t0)
+    return res, st, best
+
+
+def bench_single_shard(kind: str, scale: int, repeats: int) -> dict:
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.params import GHSParams
+
+    g = generators.generate(kind, scale, seed=1)
+    want = kruskal_ref.kruskal(g)
+    out = dict(kind=kind, scale=scale, num_vertices=g.num_vertices,
+               num_edges=g.num_edges)
+    masks = {}
+    for rk in ("xla", "pallas"):
+        res, st, dt = _time_engine(
+            g, GHSParams(round_kernel=rk), repeats)
+        ok = bool(np.array_equal(res.edge_mask, want.edge_mask)
+                  and res.total_weight == want.total_weight)
+        masks[rk] = res.edge_mask
+        out[rk] = dict(
+            seconds=dt, rounds=st.rounds, host_syncs=st.host_syncs,
+            intervals=st.intervals, compactions=st.compactions,
+            ms_per_round=1e3 * dt / max(st.rounds, 1),
+            oracle_exact=ok)
+        assert ok, f"round_kernel={rk} diverged from the Kruskal oracle"
+    assert bool(np.array_equal(masks["xla"], masks["pallas"])), \
+        "round kernels disagree"
+    out["speedup"] = out["xla"]["seconds"] / out["pallas"]["seconds"]
+    out["speedup_per_round"] = (out["xla"]["ms_per_round"]
+                                / out["pallas"]["ms_per_round"])
+    return out
+
+
+def bench_kernel_interpret(kind: str, scale: int, repeats: int) -> dict:
+    """Drive the actual Pallas kernels (interpret mode) on a small graph.
+
+    Semantics leg: asserts the kernel lowering's forest is oracle-exact;
+    its timing is reported but interpret mode is NOT a perf path."""
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.params import GHSParams
+
+    g = generators.generate(kind, scale, seed=1)
+    want = kruskal_ref.kruskal(g)
+    res, st, dt = _time_engine(
+        g, GHSParams(round_kernel="pallas", use_pallas=True), repeats)
+    ok = bool(np.array_equal(res.edge_mask, want.edge_mask))
+    assert ok, "Pallas interpret round kernel diverged from the oracle"
+    return dict(kind=kind, scale=scale, num_edges=g.num_edges,
+                seconds=dt, rounds=st.rounds,
+                ms_per_round=1e3 * dt / max(st.rounds, 1),
+                oracle_exact=ok, interpret=True)
+
+
+def bench_batched(scale: int, count: int, repeats: int) -> dict:
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.mst_api import minimum_spanning_forests
+    from repro.core.params import GHSParams
+
+    gs = [generators.generate("rmat", scale, seed=s) for s in range(count)]
+    oracle = [kruskal_ref.kruskal(g) for g in gs]
+    out = dict(scale=scale, count=count)
+    masks = {}
+    for rk in ("xla", "pallas"):
+        params = GHSParams(round_kernel=rk)
+        minimum_spanning_forests(gs, params=params)      # warm / compile
+        best, res = float("inf"), None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res, st = minimum_spanning_forests(gs, params=params)
+            best = min(best, time.perf_counter() - t0)
+        ok = all(np.array_equal(r.edge_mask, o.edge_mask)
+                 for r, o in zip(res, oracle))
+        masks[rk] = [r.edge_mask for r in res]
+        out[rk] = dict(seconds=best, oracle_exact=bool(ok))
+        assert ok, f"batched round_kernel={rk} diverged from the oracle"
+    agree = all(np.array_equal(a, b)
+                for a, b in zip(masks["xla"], masks["pallas"]))
+    assert agree, "batched round kernels disagree"
+    out["kernels_agree"] = bool(agree)
+    out["speedup"] = out["xla"]["seconds"] / out["pallas"]["seconds"]
+    return out
+
+
+def bench_shard_sweep(scale: int, shard_counts, kinds) -> list[dict]:
+    rows = []
+    for kind in kinds:
+        for p in shard_counts:
+            env = dict(
+                os.environ,
+                XLA_FLAGS=f"--xla_force_host_platform_device_count={p}",
+                PYTHONPATH="src")
+            out = subprocess.run(
+                [sys.executable, "-c", _SWEEP_CHILD, kind, str(scale),
+                 str(p)],
+                capture_output=True, text=True, env=env, check=True)
+            rows.extend(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=13)
+    ap.add_argument("--kind", default="rmat")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--shards", default="1,2,4",
+                    help="comma-separated shard counts for the sweep")
+    ap.add_argument("--sweep-scale", type=int, default=None,
+                    help="graph scale for the shard sweep "
+                         "(default: min(scale, 11))")
+    ap.add_argument("--kernel-scale", type=int, default=9,
+                    help="graph scale for the Pallas-interpret leg")
+    ap.add_argument("--batch-scale", type=int, default=None,
+                    help="per-graph scale for the batched leg "
+                         "(default: min(scale, 10))")
+    ap.add_argument("--batch-count", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_election_kernel.json")
+    args = ap.parse_args(argv)
+
+    pin_backend("cpu")
+
+    single = bench_single_shard(args.kind, args.scale, args.repeats)
+    x, f = single["xla"], single["pallas"]
+    print(f"# election-kernel bench — {args.kind} scale {args.scale}, "
+          f"{single['num_edges']} edges, single shard")
+    print(f"{'round_kernel':13s} {'time_s':>8s} {'ms/round':>9s} "
+          f"{'rounds':>7s}")
+    for name, row in (("xla", x), ("pallas(fused)", f)):
+        print(f"{name:13s} {row['seconds']:8.3f} {row['ms_per_round']:9.2f} "
+              f"{row['rounds']:7d}")
+    print(f"speedup: {single['speedup']:.2f}x end-to-end, "
+          f"{single['speedup_per_round']:.2f}x per round")
+
+    kern = bench_kernel_interpret(args.kind, args.kernel_scale,
+                                  max(args.repeats, 1))
+    print(f"# Pallas interpret leg — scale {args.kernel_scale}: "
+          f"oracle_exact={kern['oracle_exact']} "
+          f"({kern['ms_per_round']:.1f} ms/round, semantics check only)")
+
+    shard_counts = [int(s) for s in args.shards.split(",") if s]
+    sweep_scale = args.sweep_scale or min(args.scale, 11)
+    sweep = bench_shard_sweep(sweep_scale, shard_counts,
+                              ("rmat", "ssca2", "random"))
+    bad = [r for r in sweep
+           if not (r["ok"] and r["kernels_agree"])]
+    print(f"# shard sweep — scale {sweep_scale}, shards {shard_counts}: "
+          f"{len(sweep)} runs, {len(sweep) - len(bad)} bit-identical to "
+          f"the Kruskal oracle and across round kernels")
+    for r in bad:
+        print("  MISMATCH:", r)
+
+    batch_scale = args.batch_scale or min(args.scale, 10)
+    batched = bench_batched(batch_scale, args.batch_count, args.repeats)
+    print(f"# batched leg — {batched['count']}x scale {batched['scale']}: "
+          f"bit-identical={batched['kernels_agree']}, "
+          f"speedup {batched['speedup']:.2f}x")
+
+    record = dict(
+        single_shard=single,
+        kernel_interpret=kern,
+        sweep=dict(scale=sweep_scale, rows=sweep,
+                   all_bit_identical=not bad),
+        batched=batched,
+    )
+    with open(args.out, "w") as fh:
+        json.dump(record, fh, indent=2)
+    print(f"wrote {args.out}")
+    if bad:
+        raise SystemExit("bit-identity sweep failed")
+    return record
+
+
+if __name__ == "__main__":
+    main()

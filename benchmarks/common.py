@@ -1,7 +1,23 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pin_backend(platform: str = "cpu", host_devices: int | None = None) -> None:
+    """Pin the bench process's backend explicitly (repro.platform).
+
+    Must be called before the first jax computation.  ``host_devices``
+    also honors an existing ``--xla_force_host_platform_device_count`` in
+    XLA_FLAGS (the shard-sweep children set it through the environment),
+    so benches call this unconditionally.
+    """
+    from repro import platform as platform_lib
+    platform_lib.pin(platform=platform, host_devices=host_devices)
 
 
 def timeit(fn, *args, repeats: int = 1, **kw):

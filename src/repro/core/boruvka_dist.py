@@ -193,6 +193,140 @@ def _run_interval(
     return comp, mask, done, r, n_active
 
 
+def _one_round_fused(
+    comp: jnp.ndarray,
+    mask: jnp.ndarray,      # (m,) canonical-eid bitmap, replicated
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    key: jnp.ndarray,
+    csrc: jnp.ndarray,      # (m,) canonical endpoints, replicated
+    cdst: jnp.ndarray,
+    *,
+    pmin: Callable,
+    lowering: str,
+    sort_bits,
+):
+    """One Borůvka round as the fused masked min-plus SpMV (DESIGN.md §9).
+
+    ``params.round_kernel == "pallas"``: the election is ONE
+    ``spmv_minplus.elect`` call (masked min-plus SpMV — Pallas kernel,
+    scatter-free sort lowering, or the scatter oracle, chosen statically),
+    and everything after it runs at fragment scale ``n`` instead of edge
+    scale ``cap``:
+
+    * the elected ``best[f]`` already NAMES the winning edge (the packed
+      key's id lane is the canonical edge id), so winner recording is an
+      n-scale scatter into a replicated canonical-eid bitmap — the
+      cap-scale ``winners`` recompute + slot scatter of :func:`_one_round`
+      disappears, and so does the end-of-solve slot→canonical remap;
+    * the merge partner is recovered from the replicated canonical
+      endpoint arrays (two n-scale gathers), so hooking is n-scale too;
+    * ``best`` is already globally reduced, so the hook requests are
+      identical on every shard and :func:`_one_round`'s second collective
+      (the parent ``pmin``) is dropped — ONE collective per round;
+    * shortcut + relabel fuse into ``spmv_minplus.shortcut_relabel``.
+
+    Election over identical packed keys, identical winner set, identical
+    hook pairs (each elected fragment contributes the same (hi, lo) its
+    winning edge would), identical pointer doubling — bit-identical to
+    :func:`_one_round` by construction, which the adversarial corpus and
+    the bench sweep both enforce.
+    """
+    from repro.kernels.spmv_minplus import ops as spmv_ops
+    n = comp.shape[0]
+    m = mask.shape[0]
+    cs = comp[src]          # PAD_VERTEX clamps → padding is a self-loop
+    cd = comp[dst]
+    best = spmv_ops.elect(cs, cd, key, num_segments=n, lowering=lowering,
+                          sort_bits=sort_bits)
+    best = pmin(best)
+    elected = best != INF_KEY
+    eid = keys_lib.unpack_edge_id(best)      # 0xFFFFFFFF when not elected
+    mask = mask.at[jnp.where(elected, eid, jnp.uint32(m))].set(
+        True, mode="drop")
+    u = csrc[eid]           # clamped gathers; garbage gated by ``elected``
+    v = cdst[eid]
+    cu = comp[u]
+    cv = comp[v]
+    f = jnp.arange(n, dtype=jnp.uint32)
+    other = jnp.where(cu == f, cv, cu)
+    hi = jnp.maximum(f, other)
+    lo = jnp.minimum(f, other)
+    parent = union_find.hook_min(n, hi, lo, elected)
+    comp = spmv_ops.shortcut_relabel(parent, comp,
+                                     use_pallas=(lowering == "pallas"))
+    done = jnp.all(best == INF_KEY)
+    return comp, mask, done
+
+
+def _run_interval_fused(
+    comp: jnp.ndarray,
+    mask: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    key: jnp.ndarray,
+    csrc: jnp.ndarray,
+    cdst: jnp.ndarray,
+    rounds: jnp.ndarray,
+    *,
+    axis_name: Optional[str],
+    lowering: str,
+    sort_bits,
+):
+    """:func:`_run_interval` with the fused round body (round_kernel="pallas").
+
+    Differences from the XLA interval: the tree bitmap is canonical-eid
+    indexed and REPLICATED (every shard derives the same writes from the
+    globally-reduced election, so no slot side-lane and no final remap),
+    and the per-edge ``slot`` array is not consumed — compaction still
+    threads it through the engine state for shape uniformity.
+    """
+    pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
+
+    def one_round(comp, mask):
+        return _one_round_fused(comp, mask, src, dst, key, csrc, cdst,
+                                pmin=pmin, lowering=lowering,
+                                sort_bits=sort_bits)
+
+    def cond(c):
+        r, _, _, done = c
+        return jnp.logical_not(done) & (r < rounds)
+
+    def body(c):
+        r, comp, mask, _ = c
+        comp, mask, done = one_round(comp, mask)
+        return r + 1, comp, mask, done
+
+    r, comp, mask, done = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), comp, mask, jnp.bool_(False)))
+
+    active = (comp[src] != comp[dst]) & (key != INF_KEY)
+    n_active = active.sum(dtype=jnp.int32)
+    if axis_name:
+        n_active = jax.lax.pmax(n_active, axis_name)
+    return comp, mask, done, r, n_active
+
+
+@functools.lru_cache(maxsize=64)
+def _build_interval_fn_fused(
+        mesh: Optional[Mesh], lowering: str, sort_bits) -> Callable:
+    donate = runtime.donation(0, 1)
+    if mesh is None:
+        fn = partial(_run_interval_fused, axis_name=None, lowering=lowering,
+                     sort_bits=sort_bits)
+        return jax.jit(fn, donate_argnums=donate)
+    fn = compat.shard_map(
+        partial(_run_interval_fused, axis_name=_AXIS, lowering=lowering,
+                sort_bits=sort_bits),
+        mesh,
+        # mask + canonical endpoints replicated (see _run_interval_fused);
+        # only the edge working set is sharded.
+        in_specs=(P(), P(), P(_AXIS), P(_AXIS), P(_AXIS), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
+    )
+    return jax.jit(fn, donate_argnums=donate)
+
+
 _PAD_SLOT = np.int32(0x7FFF0000)   # out of any mask range → scatter-dropped
 
 
@@ -283,7 +417,31 @@ def _device_engine(
         src_d, dst_d, key_d, slot_d = (bundle.src, bundle.dst, bundle.key,
                                        bundle.slot)
         comp_dev = put(np.arange(n, dtype=np.uint32), repl_sh)
-        mask_dev = put(np.zeros(m0, dtype=bool), edge_sh)
+
+        fused = runtime.resolve_round_kernel(params.round_kernel) == "pallas"
+        if fused:
+            # Fused round body (DESIGN.md §9): replicated canonical-eid
+            # bitmap + replicated canonical endpoints for n-scale winner
+            # recording and hooking.  bundle.graph() is the same host
+            # mirror forest_from_mask reads at the end, so this stages no
+            # transfer the solve would not have made anyway.
+            from repro.kernels.spmv_minplus import ops as spmv_ops
+            g_host = bundle.graph()
+            csrc_d = put(g_host.src if m else np.zeros(1, np.int32), repl_sh)
+            cdst_d = put(g_host.dst if m else np.zeros(1, np.int32), repl_sh)
+            mask_dev = put(np.zeros(m, dtype=bool), repl_sh)
+            sort_bits = spmv_ops.sort_gate(n, m)
+            if sort_bits is not None and np.any(
+                    g_host.weight.view(np.uint32)
+                    >= spmv_ops.WEIGHT_LIMIT_BITS):
+                sort_bits = None   # host weights outside (0, 1): no sort key
+            lowering = ("pallas" if params.use_pallas
+                        else "sort" if sort_bits is not None else "scatter")
+            fn = _build_interval_fn_fused(
+                mesh, lowering, sort_bits if lowering == "sort" else None)
+        else:
+            mask_dev = put(np.zeros(m0, dtype=bool), edge_sh)
+            fn = _build_interval_fn(mesh, params.use_pallas)
 
         interval = max(params.check_frequency, 1)
         cap_rounds = max_rounds or (n + 2)
@@ -291,13 +449,17 @@ def _device_engine(
         history = []
         box = dict(cur_block=layout.block)
 
-        fn = _build_interval_fn(mesh, params.use_pallas)
-
         def dispatch(s):
             comp_dev, mask_dev, src_d, dst_d, key_d, slot_d = s
             this_rounds = min(interval, cap_rounds - stats.rounds)
-            comp_dev, mask_dev, done_t, r_t, act_t = fn(
-                comp_dev, mask_dev, src_d, dst_d, key_d, slot_d, this_rounds)
+            if fused:
+                comp_dev, mask_dev, done_t, r_t, act_t = fn(
+                    comp_dev, mask_dev, src_d, dst_d, key_d, csrc_d, cdst_d,
+                    this_rounds)
+            else:
+                comp_dev, mask_dev, done_t, r_t, act_t = fn(
+                    comp_dev, mask_dev, src_d, dst_d, key_d, slot_d,
+                    this_rounds)
             # The interval's scalar summary: three replicated values,
             # fetched by the runtime with ONE device_get.
             return (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d), \
@@ -331,9 +493,13 @@ def _device_engine(
         stats.host_syncs += 1
 
     comp_final = np.asarray(comp_final)
-    # The bitmap lives in the load-time slot layout; the layout maps slots
-    # back to canonical edge ids (padding slots never set).
-    mask = layout.canonical_mask(np.asarray(mask_full), m)
+    if fused:
+        # The fused rounds record winners canonical-eid-indexed directly.
+        mask = np.asarray(mask_full)
+    else:
+        # The bitmap lives in the load-time slot layout; the layout maps
+        # slots back to canonical edge ids (padding slots never set).
+        mask = layout.canonical_mask(np.asarray(mask_full), m)
     ncomp = int(np.unique(comp_final).size)
     res = runtime.forest_from_mask(bundle.graph(), mask, num_components=ncomp)
     res.check_consistent(n)
@@ -366,7 +532,7 @@ class BatchStats(BoruvkaStats):
 
 
 def _one_round_packed(comp, mask, src, dst, key, slot, *,
-                      s_bits: int, c_bits: int):
+                      s_bits: int, c_bits: int, election: str = "scatter"):
     """One Borůvka round specialized to the batched identity layout.
 
     Bit-identical to :func:`_one_round` (same elections, same winner set,
@@ -389,12 +555,36 @@ def _one_round_packed(comp, mask, src, dst, key, slot, *,
     eid = key & jnp.uint64(0xFFFFFFFF)
     base = ((wbits << jnp.uint64(c_bits + s_bits))
             | (eid << jnp.uint64(s_bits)))
-    seg = jnp.concatenate([cs, cd]).astype(jnp.int32)
-    val = jnp.concatenate([
-        jnp.where(alive, base | cd.astype(jnp.uint64), ones),
-        jnp.where(alive, base | cs.astype(jnp.uint64), ones),
-    ])
-    best = jnp.full((n,), ones, jnp.uint64).at[seg].min(val, mode="drop")
+    if election == "sort":
+        # round_kernel="pallas", batched: the same masked min-plus election
+        # lowered scatter-free — prepend the electing fragment ABOVE the
+        # packed value (weights < 1.0 keep wbits in 30 bits, so
+        # (seg ‖ wbits ‖ eid ‖ other) is 2·s_bits + 30 + c_bits ≤ 64, the
+        # contraction gate), key-only sort, and read each fragment's
+        # winner back with a searchsorted probe.  Exact min over identical
+        # values → bit-identical to the scatter election.
+        shift = jnp.uint64(30 + c_bits + s_bits)
+        sk = jnp.concatenate([
+            jnp.where(alive, (cs.astype(jnp.uint64) << shift)
+                      | base | cd.astype(jnp.uint64), ones),
+            jnp.where(alive, (cd.astype(jnp.uint64) << shift)
+                      | base | cs.astype(jnp.uint64), ones),
+        ])
+        (sk,) = jax.lax.sort((sk,), num_keys=1)
+        m2 = sk.shape[0]
+        frag = jnp.arange(n, dtype=jnp.uint64)
+        pos = jnp.searchsorted(sk, frag << shift)
+        cand = sk[jnp.minimum(pos, m2 - 1)]
+        found = (pos < m2) & ((cand >> shift) == frag) & (cand != ones)
+        best = jnp.where(
+            found, cand & ((jnp.uint64(1) << shift) - jnp.uint64(1)), ones)
+    else:
+        seg = jnp.concatenate([cs, cd]).astype(jnp.int32)
+        val = jnp.concatenate([
+            jnp.where(alive, base | cd.astype(jnp.uint64), ones),
+            jnp.where(alive, base | cs.astype(jnp.uint64), ones),
+        ])
+        best = jnp.full((n,), ones, jnp.uint64).at[seg].min(val, mode="drop")
     elected = best != ones
     best_eid = ((best >> jnp.uint64(s_bits))
                 & jnp.uint64((1 << c_bits) - 1)).astype(jnp.int32)
@@ -473,6 +663,7 @@ def _run_interval_batch(
     *,
     use_pallas: bool,
     contract_bits: Optional[Tuple[int, int]],
+    election: str = "scatter",
 ):
     """Advance up to ``rounds`` Borůvka rounds for a whole graph bucket.
 
@@ -493,8 +684,8 @@ def _run_interval_batch(
     """
     if contract_bits is not None:
         s_bits, c_bits = contract_bits
-        step = jax.vmap(partial(_one_round_packed,
-                                s_bits=s_bits, c_bits=c_bits))
+        step = jax.vmap(partial(_one_round_packed, s_bits=s_bits,
+                                c_bits=c_bits, election=election))
     else:
         step = jax.vmap(partial(_one_round, pmin=lambda x: x,
                                 use_pallas=use_pallas))
@@ -533,13 +724,14 @@ def _run_interval_batch(
 
 @functools.lru_cache(maxsize=16)
 def _build_batch_interval_fn(
-        use_pallas: bool, contract_bits: Optional[Tuple[int, int]]) -> Callable:
+        use_pallas: bool, contract_bits: Optional[Tuple[int, int]],
+        election: str = "scatter") -> Callable:
     # The whole per-lane state is mutated (contraction rewrites the edge
     # arrays too) — donate it all for in-place reuse; rounds is traced, so
     # one executable serves every interval length per bucket shape.
     donate = runtime.donation(0, 1, 2, 3, 4, 5, 6, 7)
     fn = partial(_run_interval_batch, use_pallas=use_pallas,
-                 contract_bits=contract_bits)
+                 contract_bits=contract_bits, election=election)
     return jax.jit(fn, donate_argnums=donate)
 
 
@@ -585,6 +777,18 @@ def _solve_bucket(
     n_pad, cap, B = batch.n_pad, batch.cap, batch.batch_size
     contract_bits = (_contract_gate(batch)
                      if params.compaction == "pow2" else None)
+    # round_kernel="pallas" under vmap: the fused formulation IS the packed
+    # round (n-scale recording + hooking); what changes is the election
+    # lowering — scatter-free sort when the bucket passes the bit gate and
+    # every weight sits below 1.0 (keeps the all-ones dead sentinel
+    # unreachable).  Ungated buckets keep the plain XLA fallback rounds.
+    election = "scatter"
+    if (runtime.resolve_round_kernel(params.round_kernel) == "pallas"
+            and contract_bits is not None):
+        real = batch.key != keys_lib.INF_KEY
+        wbits = batch.key >> np.uint64(32)
+        if not np.any(real & (wbits >= np.uint64(0x3F800000))):
+            election = "sort"
 
     with enable_x64():
         src_d = jnp.asarray(batch.src)
@@ -604,7 +808,8 @@ def _solve_bucket(
         history = []
         box = dict(cur_cap=cap)
 
-        fn = _build_batch_interval_fn(params.use_pallas, contract_bits)
+        fn = _build_batch_interval_fn(params.use_pallas, contract_bits,
+                                      election)
 
         def dispatch(s):
             comp, mask, src_d, dst_d, key_d, slot_d, done, rdone = s

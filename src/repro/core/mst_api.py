@@ -43,12 +43,16 @@ def minimum_spanning_forest(
     loop (default — at most one host sync per ``check_frequency`` interval)
     or the legacy host-driven loop, and ``params.partitioner`` picks the
     graph distribution (block / hashed / balanced, applied to edges for
-    Borůvka and to vertices for GHS — :mod:`repro.core.partition`).  All
-    return ``(ForestResult, stats)`` with ``stats`` deriving from
+    Borůvka and to vertices for GHS — :mod:`repro.core.partition`).  For
+    the Borůvka device loop ``params.round_kernel`` additionally picks the
+    round body: ``"xla"`` (per-edge scatter/gather chain, the default) or
+    ``"pallas"`` (fused masked min-plus election via
+    :mod:`repro.kernels.spmv_minplus` — DESIGN.md §9).  All return
+    ``(ForestResult, stats)`` with ``stats`` deriving from
     :class:`repro.core.runtime.EngineStats`; the forest is bit-identical
-    between engines, loop drivers, and partitioners (and to the Kruskal
-    oracle) because all of them elect edges under the same packed
-    (weight, edge-id) total order of :mod:`repro.core.keys`.
+    between engines, loop drivers, round kernels, and partitioners (and to
+    the Kruskal oracle) because all of them elect edges under the same
+    packed (weight, edge-id) total order of :mod:`repro.core.keys`.
     """
     try:
         engine = _ENGINES[method]

@@ -58,6 +58,18 @@ class GHSParams:
                                       #   interval, both engines)
                                       # 'host': legacy per-round / per-superstep
                                       #   host loop
+    round_kernel: str = "xla"         # Borůvka round body (DESIGN.md §9):
+                                      # 'xla' — per-edge scatter/gather chain
+                                      #   (_one_round, the seed behavior)
+                                      # 'pallas' — fused masked min-plus
+                                      #   election (kernels/spmv_minplus) with
+                                      #   n-scale recording/hooking and one
+                                      #   collective per round; with
+                                      #   use_pallas=True the election and
+                                      #   shortcut run as Pallas kernels
+                                      #   (interpret mode on CPU), otherwise
+                                      #   the scatter-free sort lowering.
+                                      #   Bit-identical forests either way.
     # Batched solving knobs (DESIGN.md §8) — minimum_spanning_forests only.
     batch_bucket: str = "pow2"        # pack_batch shape-bucketing policy:
                                       # 'pow2' rounds (n, m) up to powers of

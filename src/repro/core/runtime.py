@@ -50,6 +50,7 @@ from repro.core.graph import PAD_VERTEX, Graph
 from repro.core.kruskal_ref import ForestResult
 
 ROUND_LOOPS = ("device", "host")
+ROUND_KERNELS = ("xla", "pallas")
 
 
 @dataclasses.dataclass
@@ -148,6 +149,21 @@ def resolve_round_loop(round_loop: str) -> str:
         raise ValueError(
             f"unknown round_loop {round_loop!r}; options: {ROUND_LOOPS}")
     return round_loop
+
+
+def resolve_round_kernel(round_kernel: str) -> str:
+    """Validate the ``params.round_kernel`` knob (Borůvka round body).
+
+    ``"xla"`` — the per-edge scatter/gather chain (``_one_round``), the
+    seed behavior.  ``"pallas"`` — the fused masked min-plus formulation
+    backed by the ``kernels/spmv_minplus`` family (DESIGN.md §9); the
+    device round loop and the batched path honor it, the legacy host loop
+    and the faithful GHS engine ignore it.
+    """
+    if round_kernel not in ROUND_KERNELS:
+        raise ValueError(
+            f"unknown round_kernel {round_kernel!r}; options: {ROUND_KERNELS}")
+    return round_kernel
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,11 @@ def segment_min_sorted(
     The run-end elements of the scan hold each segment's min; the final
     scatter is conflict-free (each output slot written exactly once)."""
     m = seg.shape[0]
+    if m == 0 or num_segments == 0:
+        # No input runs (or no output slots): every segment is empty and
+        # gets the INF sentinel.  Never reach pallas_call with a zero grid
+        # — interpret mode tolerates it, compiled lowering does not.
+        return jnp.full((num_segments,), np.uint32(0xFFFFFFFF), jnp.uint32)
     pad = (-m) % block
     if pad:
         seg = jnp.concatenate([seg, jnp.full(pad, np.int32(0x7FFFFFF0), jnp.int32)])
@@ -72,6 +77,9 @@ def segment_min64_sorted(
     Pallas scan — the key is split into uint32 lanes so the kernel stays in
     native VPU word width (requires x64 enabled for the uint64 in/out)."""
     m = seg.shape[0]
+    if m == 0 or num_segments == 0:
+        # Empty input / output: INF_KEY sentinels, no zero-grid kernel.
+        return jnp.full((num_segments,), INF_U64, jnp.uint64)
     pad = (-m) % block
     if pad:
         seg = jnp.concatenate([seg, jnp.full(pad, _PAD_SEG, jnp.int32)])

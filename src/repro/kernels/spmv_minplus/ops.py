@@ -1,0 +1,159 @@
+"""jit'd dispatch for the fused Borůvka round body (DESIGN.md §9).
+
+Three lowerings of the SAME masked min-plus election, selected statically:
+
+* ``"scatter"`` — the XLA oracle (two scatter-mins); always available.
+* ``"sort"``    — scatter-free: packs (fragment ‖ weight-bits ‖ edge-id)
+  into one uint64, key-only sorts, and reads each fragment's winner with a
+  ``searchsorted`` probe.  This is the fast lowering on backends where
+  scatters serialize (XLA:CPU — see DESIGN.md §7/§9); gated by
+  :func:`sort_gate` on the bit budget.
+* ``"pallas"``  — the :mod:`.spmv_minplus` masked pair-lex scan kernel
+  (sort by fragment, tiled masked segmented min-scan, conflict-free
+  run-end extraction).  The accelerator lowering; interpret mode keeps the
+  exact kernel semantics testable on CPU CI.
+
+All three are exact min-reductions over identical packed keys, so they are
+bit-identical by construction — tests enforce it under hypothesis-generated
+layouts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as keys_lib
+from repro.kernels.spmv_minplus import ref
+from repro.kernels.spmv_minplus.spmv_minplus import (
+    masked_minplus_scan, pointer_jump)
+
+INF_U64 = keys_lib.INF_KEY
+_PAD_SEG = np.int32(0x7FFFFFF0)
+# Weight-bits budget of the sort lowering: engine weights lie in (0, 1), so
+# their IEEE-754 patterns are < 0x3F800000 < 2**30 - 1 (keys.py contract).
+WEIGHT_BITS = 30
+WEIGHT_LIMIT_BITS = np.uint32(0x3F800000)  # ieee754_bits(1.0f)
+
+ELECT_LOWERINGS = ("scatter", "sort", "pallas")
+
+
+def sort_gate(num_vertices: int, num_edges: int) -> "tuple[int, int] | None":
+    """(s_bits, c_bits) for the sort lowering, or None when fragment labels
+    + 30-bit weights + edge ids cannot share one uint64 sort key.
+
+    Callers must separately guarantee weight bits < 2**30 (true for the
+    (0, 1) pipeline weights; host graphs are checked against
+    ``WEIGHT_LIMIT_BITS``), which also keeps the all-ones dead sentinel
+    unreachable by any live edge.
+    """
+    s_bits = max(int(num_vertices) - 1, 1).bit_length()
+    c_bits = max(int(num_edges) - 1, 1).bit_length()
+    if s_bits + WEIGHT_BITS + c_bits > 64:
+        return None
+    return s_bits, c_bits
+
+
+def _elect_sort(cs, cd, key, *, num_segments, sort_bits):
+    """Scatter-free election: key-only sort + searchsorted winner probe."""
+    s_bits, c_bits = sort_bits
+    shift = np.uint64(WEIGHT_BITS + c_bits)
+    payload_mask = np.uint64((1 << (WEIGHT_BITS + c_bits)) - 1)
+    eid_mask = np.uint64((1 << c_bits) - 1)
+    ones = INF_U64
+
+    alive = (cs != cd) & (key != INF_U64)
+    # payload = (weight-bits ‖ edge-id), re-based from the 32-bit edge-id
+    # lane of the engine key to the graph's actual c_bits width.
+    payload = (((key >> np.uint64(32)) << np.uint64(c_bits))
+               | (key & np.uint64(0xFFFFFFFF)))
+
+    def side(seg):
+        sk = (seg.astype(jnp.uint64) << shift) | payload
+        return jnp.where(alive, sk, ones)
+
+    (pk,) = jax.lax.sort((jnp.concatenate([side(cs), side(cd)]),),
+                         num_keys=1)
+    m2 = pk.shape[0]
+    frag = jnp.arange(num_segments, dtype=jnp.uint64)
+    pos = jnp.searchsorted(pk, frag << shift)
+    cand = pk[jnp.minimum(pos, m2 - 1)]
+    ok = (pos < m2) & ((cand >> shift) == frag) & (cand != ones)
+    pay = cand & payload_mask
+    best = ((pay >> np.uint64(c_bits)) << np.uint64(32)) | (pay & eid_mask)
+    return jnp.where(ok, best, INF_U64)
+
+
+def _elect_pallas(cs, cd, key, *, num_segments, block, interpret):
+    """Kernel election: fragment-sort both directions, masked scan, run-end
+    extraction with a conflict-free scatter (each slot written once)."""
+    seg2 = jnp.concatenate([cs, cd]).astype(jnp.int32)
+    oth2 = jnp.concatenate([cd, cs]).astype(jnp.int32)
+    hi, lo = keys_lib.split_key_lanes(key)
+    hi2 = jnp.concatenate([hi, hi])
+    lo2 = jnp.concatenate([lo, lo])
+    order = jnp.argsort(seg2)
+    seg2, oth2, hi2, lo2 = (seg2[order], oth2[order], hi2[order], lo2[order])
+    pad = (-seg2.shape[0]) % block
+    if pad:
+        # Padding lanes carry seg == oth, dead by the kernel's own mask.
+        seg2 = jnp.concatenate([seg2, jnp.full(pad, _PAD_SEG, jnp.int32)])
+        oth2 = jnp.concatenate([oth2, jnp.full(pad, _PAD_SEG, jnp.int32)])
+        inf32 = jnp.full(pad, np.uint32(0xFFFFFFFF), jnp.uint32)
+        hi2 = jnp.concatenate([hi2, inf32])
+        lo2 = jnp.concatenate([lo2, inf32])
+    shi, slo = masked_minplus_scan(seg2, oth2, hi2, lo2, block=block,
+                                   interpret=interpret)
+    scan = keys_lib.combine_key_lanes(shi, slo)
+    nxt = jnp.concatenate([seg2[1:], jnp.full(1, -3, jnp.int32)])
+    run_end = seg2 != nxt
+    out = jnp.full((num_segments,), INF_U64, jnp.uint64)
+    idx = jnp.where(run_end, seg2, num_segments)
+    return out.at[idx].set(jnp.where(run_end, scan, INF_U64), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "lowering",
+                                             "sort_bits", "block",
+                                             "interpret"))
+def elect(
+    cs: jnp.ndarray, cd: jnp.ndarray, key: jnp.ndarray, *,
+    num_segments: int, lowering: str = "scatter",
+    sort_bits: "tuple[int, int] | None" = None,
+    block: int = 1024, interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-fragment minimum-outgoing-edge election over packed uint64 keys.
+
+    ``cs``/``cd`` are the endpoint fragment labels of every edge slot;
+    ``key`` the (weight-bits ‖ edge-id) packed keys.  Returns ``best`` of
+    shape (num_segments,), INF_KEY where a fragment has no live edge.
+    """
+    if lowering not in ELECT_LOWERINGS:
+        raise ValueError(f"unknown elect lowering: {lowering!r}")
+    if cs.shape[0] == 0 or num_segments == 0:
+        return jnp.full((num_segments,), INF_U64, jnp.uint64)
+    if lowering == "sort":
+        assert sort_bits is not None, "sort lowering requires sort_bits"
+        return _elect_sort(cs, cd, key, num_segments=num_segments,
+                           sort_bits=sort_bits)
+    if lowering == "pallas":
+        return _elect_pallas(cs, cd, key, num_segments=num_segments,
+                             block=block, interpret=interpret)
+    return ref.elect(cs, cd, key, num_segments=num_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def shortcut_relabel(
+    parent: jnp.ndarray, comp: jnp.ndarray, *,
+    use_pallas: bool = False, interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused pointer-jumping shortcut + fragment relabel.
+
+    Equivalent to ``union_find.pointer_double(parent)[comp]``; the Pallas
+    path runs all doubling steps and the relabel in one VMEM-resident
+    launch.
+    """
+    if not use_pallas:
+        return ref.shortcut_relabel(parent, comp)
+    return pointer_jump(parent, comp, interpret=interpret)

@@ -38,6 +38,35 @@ print(json.dumps(dict(ok=True, rounds=stats.rounds)))
     assert json.loads(out.strip().splitlines()[-1])["ok"]
 
 
+def test_boruvka_round_kernel_pallas_1_2_4_shards():
+    """The fused round body (round_kernel="pallas", DESIGN.md §9) stays
+    bit-identical to the Kruskal oracle AND to the XLA chain on 1/2/4
+    shards — the replicated canonical bitmap + single-collective round must
+    not depend on the shard count."""
+    out = run_child("""
+import numpy as np, jax, json
+from repro.compat import make_mesh
+from repro.core import generators, kruskal_ref
+from repro.core.boruvka_dist import minimum_spanning_forest
+from repro.core.params import GHSParams
+g = generators.generate("rmat", 9, seed=3)
+want = kruskal_ref.kruskal(g)
+rows = []
+for shards in (1, 2, 4):
+    mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+    masks = {}
+    for rk in ("xla", "pallas"):
+        got, st = minimum_spanning_forest(
+            g, params=GHSParams(round_kernel=rk), mesh=mesh)
+        masks[rk] = got.edge_mask
+        assert np.array_equal(got.edge_mask, want.edge_mask), (shards, rk)
+    assert np.array_equal(masks["xla"], masks["pallas"]), shards
+    rows.append(shards)
+print(json.dumps(dict(ok=True, shards=rows)))
+""", devices=4)
+    assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
 def test_ghs_multidevice_exact():
     out = run_child("""
 import numpy as np, jax, json

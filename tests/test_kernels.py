@@ -221,3 +221,179 @@ def test_selective_scan_step_consistency():
         outs.append(y)
     assert float(jnp.abs(jnp.stack(outs, 1) - want).max()) < 1e-3
     assert float(jnp.abs(h - h_want).max()) < 1e-3
+
+
+# --- segment_min edge cases (regressions) ------------------------------------
+
+def test_segment_min_empty_input_returns_inf():
+    """m == 0 must return INF sentinels without reaching a zero-grid
+    pallas_call (interpret mode tolerates one, compiled lowering does not)."""
+    from jax.experimental import enable_x64
+    from repro.kernels.segment_min import ops
+    empty32 = jnp.zeros(0, jnp.uint32)
+    emptyseg = jnp.zeros(0, jnp.int32)
+    got = ops.segment_min_sorted(empty32, emptyseg, num_segments=7)
+    assert np.array_equal(np.asarray(got), np.full(7, 0xFFFFFFFF, np.uint32))
+    got = ops.segment_min(empty32, emptyseg, num_segments=7, use_pallas=True)
+    assert np.array_equal(np.asarray(got), np.full(7, 0xFFFFFFFF, np.uint32))
+    with enable_x64():
+        got = ops.segment_min64_sorted(jnp.zeros(0, jnp.uint64), emptyseg,
+                                       num_segments=5)
+        assert np.array_equal(np.asarray(got),
+                              np.full(5, ops.INF_U64, np.uint64))
+        got = ops.segment_min64(jnp.zeros(0, jnp.uint64), emptyseg,
+                                num_segments=5, use_pallas=True)
+        assert np.array_equal(np.asarray(got),
+                              np.full(5, ops.INF_U64, np.uint64))
+
+
+def test_segment_min_zero_segments():
+    from repro.kernels.segment_min import ops
+    got = ops.segment_min_sorted(
+        jnp.asarray([3, 1], jnp.uint32), jnp.asarray([0, 1], jnp.int32),
+        num_segments=0)
+    assert got.shape == (0,)
+
+
+def test_segment_min_fully_masked_inputs_return_inf():
+    """All-PAD_VERTEX segments (every lane is engine padding): every real
+    segment must come back INF — the sentinel run may not leak into any
+    output slot."""
+    from jax.experimental import enable_x64
+    from repro.core.graph import PAD_VERTEX
+    from repro.kernels.segment_min import ops
+    m, s = 1000, 13
+    seg = np.full(m, PAD_VERTEX, np.int32)
+    val = np.full(m, 0xFFFFFFFF, np.uint32)
+    got = ops.segment_min(jnp.asarray(val), jnp.asarray(seg),
+                          num_segments=s, use_pallas=True)
+    assert np.array_equal(np.asarray(got), np.full(s, 0xFFFFFFFF, np.uint32))
+    with enable_x64():
+        key = np.full(m, ops.INF_U64, np.uint64)
+        got = ops.segment_min64(jnp.asarray(key), jnp.asarray(seg),
+                                num_segments=s, use_pallas=True)
+        assert np.array_equal(np.asarray(got),
+                              np.full(s, ops.INF_U64, np.uint64))
+
+
+# --- spmv_minplus (fused Borůvka round body, DESIGN.md §9) -------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # container ships without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _election_case(rng, *, all_equal=False, dup_keys=False, ragged=False):
+    """One CSR-shaped election layout: endpoint fragment labels + packed
+    keys, with dead edges, INF padding lanes, optional duplicate keys /
+    all-equal weights / ragged (skewed) segment sizes."""
+    n = int(rng.integers(1, 50))
+    m = int(rng.integers(0, 300))
+    cs = rng.integers(0, n, m).astype(np.uint32)
+    cd = rng.integers(0, n, m).astype(np.uint32)
+    if ragged and m:
+        # Pile half the edges onto a few fragments → long and empty runs.
+        cs[: m // 2] = rng.integers(0, max(n // 8, 1), m // 2)
+    if all_equal:
+        wbits = np.full(m, 0x3F000000, np.uint64)       # bits of 0.5f
+    else:
+        wbits = rng.integers(0, 1 << 29, m).astype(np.uint64)
+    eid = np.arange(m, dtype=np.uint64)
+    if dup_keys and m:
+        eid = rng.integers(0, max(m // 3, 1), m).astype(np.uint64)
+    key = (wbits << np.uint64(32)) | eid
+    if m:
+        key[rng.random(m) < 0.15] = np.uint64(0xFFFFFFFFFFFFFFFF)
+        dead = rng.random(m) < 0.2
+        cd[dead] = cs[dead]                              # self-fragment edges
+    return n, cs, cd, key
+
+
+def _assert_elect_lowerings_agree(n, cs, cd, key):
+    from jax.experimental import enable_x64
+    from repro.kernels.spmv_minplus import ops
+    m = key.shape[0]
+    with enable_x64():
+        args = (jnp.asarray(cs), jnp.asarray(cd), jnp.asarray(key))
+        want = ops.elect(*args, num_segments=n, lowering="scatter")
+        sort_bits = ops.sort_gate(n, max(m, 1))
+        got_sort = ops.elect(*args, num_segments=n, lowering="sort",
+                             sort_bits=sort_bits)
+        got_pallas = ops.elect(*args, num_segments=n, lowering="pallas",
+                               block=128)
+        assert np.array_equal(np.asarray(want), np.asarray(got_sort))
+        assert np.array_equal(np.asarray(want), np.asarray(got_pallas))
+
+
+@pytest.mark.parametrize("case", ["plain", "ragged", "dup_keys", "all_equal"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_elect_lowerings_agree_seeded(case, seed):
+    """scatter/sort/pallas(interpret) elections are bit-identical across
+    ragged segments, duplicate keys, and all-equal weights (seeded sweep —
+    the hypothesis variant below widens this when hypothesis is present)."""
+    rng = np.random.default_rng(1000 * seed + hash(case) % 997)
+    n, cs, cd, key = _election_case(
+        rng, all_equal=(case == "all_equal"), dup_keys=(case == "dup_keys"),
+        ragged=(case == "ragged"))
+    _assert_elect_lowerings_agree(n, cs, cd, key)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.booleans(), st.booleans(),
+           st.booleans())
+    def test_elect_lowerings_agree_hypothesis(seed, all_equal, dup_keys,
+                                              ragged):
+        rng = np.random.default_rng(seed)
+        n, cs, cd, key = _election_case(rng, all_equal=all_equal,
+                                        dup_keys=dup_keys, ragged=ragged)
+        _assert_elect_lowerings_agree(n, cs, cd, key)
+
+
+def test_masked_minplus_scan_matches_masked_oracle():
+    """The in-kernel mask == pre-masking the lanes then running the
+    unmasked pair-lex scan oracle."""
+    from jax.experimental import enable_x64
+    from repro.kernels.segment_min import ref as segref
+    from repro.kernels.spmv_minplus.spmv_minplus import masked_minplus_scan
+    rng = np.random.default_rng(7)
+    m = 1024
+    seg = np.sort(rng.integers(0, 11, m)).astype(np.int32)
+    oth = rng.integers(0, 11, m).astype(np.int32)
+    hi = rng.integers(0, 40, m, dtype=np.uint32)       # many hi-lane ties
+    lo = rng.integers(0, 2**32 - 2, m, dtype=np.uint32)
+    inf = np.uint32(0xFFFFFFFF)
+    hi[rng.random(m) < 0.1] = inf                      # INF padding lanes
+    lo[hi == inf] = inf
+    with enable_x64():
+        gh, gl = masked_minplus_scan(
+            jnp.asarray(seg), jnp.asarray(oth), jnp.asarray(hi),
+            jnp.asarray(lo), block=256)
+        live = (seg != oth) & ~((hi == inf) & (lo == inf))
+        mh = np.where(live, hi, inf).astype(np.uint32)
+        ml = np.where(live, lo, inf).astype(np.uint32)
+        wh, wl = segref.segmented_min2_scan(
+            jnp.asarray(seg), jnp.asarray(mh), jnp.asarray(ml))
+    assert np.array_equal(np.asarray(gh), np.asarray(wh))
+    assert np.array_equal(np.asarray(gl), np.asarray(wl))
+
+
+def test_shortcut_relabel_kernel_matches_ref():
+    from repro.kernels.spmv_minplus import ops, ref
+    rng = np.random.default_rng(11)
+    for n in (1, 2, 97, 1024):
+        # hook_min-shaped forests: parent[i] <= i.
+        parent = np.minimum(rng.integers(0, n, n), np.arange(n)).astype(
+            np.uint32)
+        comp = rng.integers(0, n, n).astype(np.uint32)
+        want = ref.shortcut_relabel(jnp.asarray(parent), jnp.asarray(comp))
+        got = ops.shortcut_relabel(jnp.asarray(parent), jnp.asarray(comp),
+                                   use_pallas=True)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), n
+        # Fully compressed: every label points at its root.
+        root = parent.copy()
+        for _ in range(max(int(np.ceil(np.log2(max(n, 2)))), 1)):
+            root = root[root]
+        assert np.array_equal(np.asarray(got), root[comp]), n

@@ -235,10 +235,14 @@ def _adversarial_corpus():
 def test_adversarial_corpus_both_engines_exact(name, g):
     want = kruskal_ref.kruskal(g)
     for params in (GHSParams(round_loop="device"),
-                   GHSParams(round_loop="host")):
+                   GHSParams(round_loop="host"),
+                   # Fused round body (DESIGN.md §9): sort/scatter lowering
+                   # and the Pallas interpret kernels, same corpus.
+                   GHSParams(round_kernel="pallas"),
+                   GHSParams(round_kernel="pallas", use_pallas=True)):
         got, _ = minimum_spanning_forest(g, method="boruvka", params=params)
         assert np.array_equal(got.edge_mask, want.edge_mask), \
-            (name, params.round_loop)
+            (name, params.round_loop, params.round_kernel)
         assert got.num_components == want.num_components
         assert got.total_weight == want.total_weight
     got, _ = minimum_spanning_forest(g, method="ghs")
@@ -248,17 +252,38 @@ def test_adversarial_corpus_both_engines_exact(name, g):
 
 def test_adversarial_corpus_batched_exact():
     """The whole corpus as ONE mixed batch: every lane oracle-exact and
-    bit-identical to its single-graph solve."""
+    bit-identical to its single-graph solve — under both round kernels."""
     from repro.core.mst_api import minimum_spanning_forests
     names, graphs = zip(*_adversarial_corpus())
-    results, stats = minimum_spanning_forests(list(graphs))
-    assert len(stats.rounds_per_graph) == len(graphs)
-    for name, g, got in zip(names, graphs, results):
+    for rk in ("xla", "pallas"):
+        results, stats = minimum_spanning_forests(
+            list(graphs), params=GHSParams(round_kernel=rk))
+        assert len(stats.rounds_per_graph) == len(graphs)
+        for name, g, got in zip(names, graphs, results):
+            want = kruskal_ref.kruskal(g)
+            single, _ = minimum_spanning_forest(g, method="boruvka")
+            assert np.array_equal(got.edge_mask, want.edge_mask), (name, rk)
+            assert np.array_equal(got.edge_mask, single.edge_mask), (name, rk)
+            assert got.num_components == want.num_components, (name, rk)
+
+
+def test_round_kernel_pallas_identical_and_validated():
+    """round_kernel="pallas" matches the oracle and the XLA chain on the
+    paper generators, and the knob itself is validated."""
+    for kind in ("rmat", "disconnected"):
+        g = generators.generate(kind, scale=8, seed=5)
         want = kruskal_ref.kruskal(g)
-        single, _ = minimum_spanning_forest(g, method="boruvka")
-        assert np.array_equal(got.edge_mask, want.edge_mask), name
-        assert np.array_equal(got.edge_mask, single.edge_mask), name
-        assert got.num_components == want.num_components, name
+        gx, _ = minimum_spanning_forest(
+            g, params=GHSParams(round_kernel="xla"))
+        gp, stp = minimum_spanning_forest(
+            g, params=GHSParams(round_kernel="pallas", check_frequency=3))
+        assert np.array_equal(gp.edge_mask, want.edge_mask), kind
+        assert np.array_equal(gp.edge_mask, gx.edge_mask), kind
+        # The fused loop keeps the runtime sync contract.
+        assert stp.host_syncs == stp.intervals + 1
+    with pytest.raises(ValueError, match="round_kernel"):
+        minimum_spanning_forest(
+            g, params=GHSParams(round_kernel="mosaic"))
 
 
 def test_padding_inert_when_vertex0_isolated():

@@ -1,0 +1,297 @@
+"""Filter-Borůvka benchmark: the sampling hybrid vs the plain engine.
+
+Legs (``--legs``, comma-separated, default all):
+
+* ``speedup`` — rmat scale 14, ``method="boruvka"`` vs
+  ``method="filter_boruvka"`` end-to-end (warm, best-of-repeats), both
+  Kruskal-exact.  The acceptance bar is ≥ 2x for the hybrid.
+* ``scale``   — the scale ladder the hybrid unlocks: exact Kruskal oracle
+  at 14, full independent numpy-Borůvka oracle at 16, and sampled
+  spot-check certification at 18 (and 20 with ``--scale20``): the forest
+  is structurally consistent, spans every component, and a few thousand
+  randomly sampled non-tree edges are each certified non-MSF by the cycle
+  rule (endpoints connected through strictly lighter tree edges).
+* ``weak``    — one row per shard count 1/2/4/8 (8 forced host devices
+  pinned once through ``repro.platform``), growing the graph with the
+  shard count (scale 14 + log2 P).  CAVEAT: this container has one
+  physical core, so shards time-slice; edges/s per shard is the honest
+  observable, wall-clock is a proxy.
+
+Emits / merges into ``BENCH_filter_boruvka.json`` (``--out``).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_filter_boruvka.py
+    PYTHONPATH=src python benchmarks/bench_filter_boruvka.py \
+        --legs speedup,scale --max-scale 16
+    PYTHONPATH=src python benchmarks/bench_filter_boruvka.py --smoke  # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from common import pin_backend
+
+_WEAK_CHILD = r"""
+import json, math, sys, time
+from repro import platform
+platform.pin(platform="cpu", host_devices=8)
+import numpy as np
+from repro.compat import make_mesh
+from repro.core import generators
+from repro.core.mst_api import minimum_spanning_forest
+from repro.core.params import GHSParams
+
+base, rate = int(sys.argv[1]), float(sys.argv[2])
+rows = []
+for shards in (1, 2, 4, 8):
+    scale = base + int(math.log2(shards))
+    mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+    g = generators.generate("rmat", scale, seed=1)
+    params = GHSParams(filter_sample_rate=rate)
+    minimum_spanning_forest(g, method="filter_boruvka",
+                            params=params, mesh=mesh)      # warm / compile
+    t0 = time.perf_counter()
+    res, st = minimum_spanning_forest(g, method="filter_boruvka",
+                                      params=params, mesh=mesh)
+    dt = time.perf_counter() - t0
+    rows.append(dict(
+        shards=shards, scale=scale, num_vertices=g.num_vertices,
+        num_edges=g.num_edges, seconds=dt,
+        meps=g.num_edges / dt / 1e6,
+        meps_per_shard=g.num_edges / dt / 1e6 / shards,
+        edges_filtered=st.edges_filtered, filter_passes=st.filter_passes,
+        total_weight=res.total_weight))
+print(json.dumps(rows))
+"""
+
+
+def sampled_spot_check(g, res, num_queries: int = 2048, seed: int = 0) -> dict:
+    """Offline certificate sweep for scales beyond exact oracles.
+
+    Asserts (1) the tree bitmap is a consistent forest (every union along
+    ascending keys merges two components), (2) the forest spans: every
+    edge's endpoints share a final component, and (3) each of
+    ``num_queries`` randomly sampled non-tree edges is certified non-MSF
+    by the cycle rule — its endpoints are connected through tree edges
+    with strictly smaller packed keys.  Under the globally distinct
+    (weight ‖ edge-id) total order these checks certify the unique MSF on
+    the probed set.
+    """
+    import numpy as np
+    from repro.core.kruskal_ref import _DSU
+
+    keys = g.packed_keys
+    tree = np.flatnonzero(res.edge_mask)
+    order = tree[np.argsort(keys[tree])]
+
+    dsu = _DSU(g.num_vertices)
+    for e in order:
+        assert dsu.union(int(g.src[e]), int(g.dst[e])), \
+            f"tree edge {e} closes a cycle"
+    comp = np.fromiter((dsu.find(v) for v in range(g.num_vertices)),
+                       np.int64, g.num_vertices)
+    assert bool(np.all(comp[g.src] == comp[g.dst])), "forest does not span"
+    assert res.num_components == np.unique(comp).size
+
+    nontree = np.flatnonzero(~res.edge_mask)
+    rng = np.random.default_rng(seed)
+    q = rng.choice(nontree, size=min(num_queries, nontree.size),
+                   replace=False)
+    q = q[np.argsort(keys[q])]
+    sweep, ti = _DSU(g.num_vertices), 0
+    for e in q:
+        while ti < order.size and keys[order[ti]] < keys[e]:
+            t = order[ti]
+            sweep.union(int(g.src[t]), int(g.dst[t]))
+            ti += 1
+        assert sweep.find(int(g.src[e])) == sweep.find(int(g.dst[e])), \
+            f"non-tree edge {e} lacks a lighter tree path (not cycle-max)"
+    return dict(queries=int(q.size), tree_edges=int(tree.size), ok=True)
+
+
+def _time_method(g, method, params, repeats: int):
+    from repro.core.mst_api import minimum_spanning_forest
+    minimum_spanning_forest(g, method=method, params=params)  # warm
+    best, res, st = float("inf"), None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res, st = minimum_spanning_forest(g, method=method, params=params)
+        best = min(best, time.perf_counter() - t0)
+    return res, st, best
+
+
+def bench_speedup(scale: int, repeats: int) -> dict:
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.params import GHSParams
+
+    g = generators.generate("rmat", scale, seed=1)
+    want = kruskal_ref.kruskal(g)
+    out = dict(kind="rmat", scale=scale, num_vertices=g.num_vertices,
+               num_edges=g.num_edges)
+    rows = {}
+    for name, method, params in (
+            ("boruvka", "boruvka", GHSParams()),
+            ("filter_boruvka", "filter_boruvka", GHSParams()),
+            ("filter_boruvka_pallas", "filter_boruvka",
+             GHSParams(round_kernel="pallas"))):
+        res, st, dt = _time_method(g, method, params, repeats)
+        ok = bool(np.array_equal(res.edge_mask, want.edge_mask))
+        assert ok, f"{name} diverged from the Kruskal oracle"
+        rows[name] = dict(
+            seconds=dt, oracle_exact=ok,
+            edges_filtered=st.edges_filtered,
+            filter_passes=st.filter_passes,
+            host_syncs=st.host_syncs)
+    out.update(rows)
+    out["speedup"] = rows["boruvka"]["seconds"] \
+        / rows["filter_boruvka"]["seconds"]
+    out["speedup_pallas_kernel"] = rows["boruvka"]["seconds"] \
+        / rows["filter_boruvka_pallas"]["seconds"]
+    return out
+
+
+def bench_scale_ladder(max_scale: int, repeats: int,
+                       num_queries: int) -> list[dict]:
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.params import GHSParams
+
+    rows = []
+    for scale in (14, 16, 18, 20):
+        if scale > max_scale:
+            break
+        g = generators.generate("rmat", scale, seed=1)
+        params = GHSParams(round_kernel="pallas")
+        res, st, dt = _time_method(g, "filter_boruvka", params,
+                                   repeats if scale <= 16 else 1)
+        row = dict(kind="rmat", scale=scale, num_vertices=g.num_vertices,
+                   num_edges=g.num_edges, seconds=dt,
+                   meps=g.num_edges / dt / 1e6,
+                   edges_filtered=st.edges_filtered,
+                   filter_passes=st.filter_passes,
+                   survivor_history=list(st.survivor_history),
+                   total_weight=res.total_weight)
+        if scale <= 14:
+            want = kruskal_ref.kruskal(g)
+            assert bool(np.array_equal(res.edge_mask, want.edge_mask))
+            row["verify"] = "kruskal_exact"
+        elif scale <= 16:
+            want = kruskal_ref.boruvka_numpy(g)
+            assert bool(np.array_equal(res.edge_mask, want.edge_mask))
+            row["spot_check"] = sampled_spot_check(g, res, num_queries)
+            row["verify"] = "numpy_boruvka_exact+spot_check"
+        else:
+            row["spot_check"] = sampled_spot_check(g, res, num_queries)
+            row["verify"] = "spot_check"
+        rows.append(row)
+        print(f"  scale {scale}: {dt:6.2f}s  {row['meps']:6.2f} Medges/s  "
+              f"filtered {st.edges_filtered}/{g.num_edges}  "
+              f"[{row['verify']}]")
+    return rows
+
+
+def bench_weak_scaling(base_scale: int, rate: float) -> list[dict]:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)          # the child pins its own devices
+    out = subprocess.run(
+        [sys.executable, "-c", _WEAK_CHILD, str(base_scale), str(rate)],
+        capture_output=True, text=True, env=env, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bench_smoke(num_queries: int) -> dict:
+    """CI leg: rmat scale 12, Kruskal-exact + the spot-check sweep."""
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.params import GHSParams
+
+    g = generators.generate("rmat", 12, seed=1)
+    want = kruskal_ref.kruskal(g)
+    res, st, dt = _time_method(g, "filter_boruvka", GHSParams(), 1)
+    assert bool(np.array_equal(res.edge_mask, want.edge_mask)), \
+        "filter_boruvka diverged from the Kruskal oracle"
+    spot = sampled_spot_check(g, res, num_queries)
+    return dict(kind="rmat", scale=12, num_edges=g.num_edges, seconds=dt,
+                edges_filtered=st.edges_filtered,
+                filter_passes=st.filter_passes, oracle_exact=True,
+                spot_check=spot)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--legs", default="speedup,scale,weak",
+                    help="comma-separated: speedup,scale,weak")
+    ap.add_argument("--scale", type=int, default=14,
+                    help="graph scale for the speedup leg")
+    ap.add_argument("--max-scale", type=int, default=18,
+                    help="top of the scale ladder (18 or 20)")
+    ap.add_argument("--scale20", action="store_true",
+                    help="shorthand for --max-scale 20")
+    ap.add_argument("--weak-base-scale", type=int, default=14,
+                    help="shards=1 scale of the weak-scaling leg "
+                         "(P shards solve base + log2 P)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--queries", type=int, default=2048,
+                    help="sampled non-tree edges per spot check")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: scale-12 oracle-exact spot-check leg only")
+    ap.add_argument("--out", default="BENCH_filter_boruvka.json")
+    args = ap.parse_args(argv)
+
+    pin_backend("cpu")
+
+    record = {}
+    if os.path.exists(args.out):
+        with open(args.out) as fh:
+            record = json.load(fh)
+
+    if args.smoke:
+        print("# filter-Borůvka smoke — rmat scale 12")
+        record["smoke"] = bench_smoke(args.queries)
+        print(f"  exact, {record['smoke']['edges_filtered']} filtered, "
+              f"{record['smoke']['spot_check']['queries']} spot checks ok")
+    else:
+        legs = set(args.legs.split(","))
+        if "speedup" in legs:
+            print(f"# speedup — rmat scale {args.scale}, "
+                  f"filter_boruvka vs boruvka")
+            record["speedup"] = bench_speedup(args.scale, args.repeats)
+            r = record["speedup"]
+            print(f"  boruvka {r['boruvka']['seconds']:.3f}s  "
+                  f"filter {r['filter_boruvka']['seconds']:.3f}s  "
+                  f"-> {r['speedup']:.2f}x "
+                  f"({r['speedup_pallas_kernel']:.2f}x with pallas round "
+                  f"kernel)")
+        if "scale" in legs:
+            ms = 20 if args.scale20 else args.max_scale
+            print(f"# scale ladder — rmat up to {ms} "
+                  f"(filter_boruvka, pallas round kernel)")
+            record["scale_ladder"] = bench_scale_ladder(
+                ms, args.repeats, args.queries)
+        if "weak" in legs:
+            print("# weak scaling — 8 forced host devices, "
+                  "P shards solve rmat "
+                  f"{args.weak_base_scale} + log2 P  "
+                  "(1-core container: edges/s is a proxy)")
+            record["weak_scaling"] = bench_weak_scaling(
+                args.weak_base_scale,
+                rate=0.15)
+            for row in record["weak_scaling"]:
+                print(f"  P={row['shards']}  scale {row['scale']}  "
+                      f"{row['seconds']:6.2f}s  {row['meps']:6.2f} Medges/s"
+                      f"  filtered {row['edges_filtered']}")
+
+    with open(args.out, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

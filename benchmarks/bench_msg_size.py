@@ -20,13 +20,19 @@ import sys
 
 _CHILD = r"""
 import json, sys
+
+# Pin backend + forced device count BEFORE anything touches jax
+# (repro.platform raises if jax already initialized).
+kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+from repro import platform
+platform.pin(platform="cpu", host_devices=shards)
+
 import numpy as np
 from repro.core import generators
 from repro.core.ghs_message import minimum_spanning_forest
 from repro.core.params import GHSParams
 from repro.compat import make_mesh
 
-kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
 mesh = make_mesh((shards,), ("x",))
 g = generators.generate(kind, scale, seed=1)
 res, st = minimum_spanning_forest(g, mesh=mesh, collect_history=True)
@@ -45,9 +51,10 @@ print(json.dumps(dict(supersteps=n, intervals=intervals,
 
 
 def main(scale: int = 9, shards: int = 4):
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={shards}",
-               PYTHONPATH="src")
+    # The child pins its own backend/device count via repro.platform; a
+    # stray XLA_FLAGS from the caller's environment would fight it.
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
     out = subprocess.run(
         [sys.executable, "-c", _CHILD, "rmat", str(scale), str(shards)],
         capture_output=True, text=True, env=env, check=True)

@@ -16,15 +16,20 @@ import subprocess
 import sys
 
 _CHILD = r"""
-import json, os, sys, time
+import json, sys, time
+
+# Pin backend + forced device count BEFORE anything touches jax
+# (repro.platform raises if jax already initialized — DESIGN.md §9).
+kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+from repro import platform
+platform.pin(platform="cpu", host_devices=shards)
+
 import numpy as np
-import jax
 from repro.compat import make_mesh
 from repro.core import generators
 from repro.core.boruvka_dist import minimum_spanning_forest
 from repro.core.params import GHSParams
 
-kind, scale, shards = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
 mesh = None
 if shards > 1:
     mesh = make_mesh((shards,), ("x",))
@@ -43,9 +48,10 @@ print(json.dumps(dict(
 
 
 def run_cell(kind: str, scale: int, shards: int) -> dict:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={shards}",
-               PYTHONPATH="src")
+    # The child pins its own backend/device count via repro.platform; a
+    # stray XLA_FLAGS from the caller's environment would fight it.
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
     out = subprocess.run(
         [sys.executable, "-c", _CHILD, kind, str(scale), str(shards)],
         capture_output=True, text=True, env=env, check=True)

@@ -515,7 +515,11 @@ def _device_engine(
 class BatchStats(BoruvkaStats):
     """Stats for a batched solve.  ``rounds_per_graph`` (inherited from the
     runtime protocol) is ordered like the input sequence; ``bucket_shapes``
-    records one ``(n_pad, cap, batch_size)`` triple per dispatched bucket."""
+    records one ``(n_pad, cap, batch_size)`` triple per dispatched bucket.
+
+    :meth:`merge` is also the accumulation base of
+    :class:`repro.core.filter_boruvka.FilterStats` — the filter driver sums
+    its sample/final sub-solves' ledgers through the same path."""
 
     buckets: int = 0
     bucket_shapes: tuple = ()
@@ -1146,6 +1150,12 @@ def minimum_spanning_forest(
     legacy per-round host loop.  ``params.partitioner`` picks the edge
     distribution (block / hashed / balanced — DESIGN.md §7).  All
     combinations produce bit-identical forests.
+
+    This entry is also the sub-solver of the filter-Borůvka hybrid
+    (:mod:`repro.core.filter_boruvka`, DESIGN.md §10): the sample and
+    final solves are ordinary invocations over canonical-order subset
+    graphs, so every knob above composes with ``method="filter_boruvka"``
+    unchanged.
     """
     if runtime.resolve_round_loop(params.round_loop) == "host":
         return _host_engine(graph, params, mesh, max_rounds)

@@ -10,15 +10,16 @@ from typing import Optional
 
 from jax.sharding import Mesh
 
-from repro.core import boruvka_dist, ghs_message, runtime
+from repro.core import boruvka_dist, filter_boruvka, ghs_message, runtime
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 
-METHODS = ("ghs", "boruvka")
+METHODS = ("ghs", "boruvka", "filter_boruvka")
 
 _ENGINES = {
     "ghs": ghs_message.minimum_spanning_forest,
     "boruvka": boruvka_dist.minimum_spanning_forest,
+    "filter_boruvka": filter_boruvka.minimum_spanning_forest,
 }
 
 
@@ -38,6 +39,13 @@ def minimum_spanning_forest(
 
     method='ghs'     — paper-faithful message-driven GHS (the reproduction).
     method='boruvka' — TPU-native synchronous engine (beyond-paper optimized).
+    method='filter_boruvka' — sample→solve→filter→solve hybrid (DESIGN.md
+        §10): a counter-based Bernoulli edge sample is solved with the
+        Borůvka engine, the quantized cycle rule drops provably-non-MSF
+        edges against the partial forest, and the final solve runs over
+        the survivors — expected-linear work on dense graphs
+        (``params.filter_sample_rate`` / ``filter_levels`` /
+        ``filter_threshold``).
 
     For BOTH engines ``params.round_loop`` picks the device-resident fused
     loop (default — at most one host sync per ``check_frequency`` interval)

@@ -87,6 +87,25 @@ class GHSParams:
                                       # subsequent round, so SHORT intervals
                                       # win (single-graph check_frequency is
                                       # untouched)
+    # Filter-Borůvka sampling hybrid (DESIGN.md §10) — method="filter_boruvka".
+    filter_sample_rate: float = 0.15  # Bernoulli keep probability of the
+                                      # counter-based edge sample (splitmix64
+                                      # over canonical edge ids — deterministic
+                                      # at any shard count).  0 disables the
+                                      # sample solve entirely (the final solve
+                                      # then sees every edge — the empty-sample
+                                      # guarantee); ≥ 1 samples everything.
+    filter_levels: int = 16           # threshold levels of the connectivity
+                                      # probe: the cycle rule is evaluated
+                                      # against fragment labels of the sampled
+                                      # forest restricted to tree edges below
+                                      # per-level key quantiles.  More levels
+                                      # → sharper path-max bound → fewer
+                                      # survivors; never affects correctness.
+    filter_threshold: int = 0         # survivor-count bound that triggers the
+                                      # single recursion (a second
+                                      # sample→solve→filter pass over the
+                                      # survivors).  0 = auto: 4·num_vertices.
 
 
 DEFAULT_PARAMS = GHSParams()

@@ -242,6 +242,37 @@ def batched_slots(batch_size: int, cap: int) -> np.ndarray:
         np.arange(cap, dtype=np.int32), (batch_size, cap)).copy()
 
 
+def subgraph_by_mask(graph: Graph, mask: np.ndarray) -> "tuple[Graph, np.ndarray]":
+    """Canonical-order edge subset as its own :class:`Graph` (DESIGN.md §10).
+
+    Returns ``(sub, index)`` where ``sub`` keeps every masked edge in
+    canonical order and ``index[j]`` is the canonical edge id behind sub
+    edge ``j``.  Because the subset preserves the canonical sort and the
+    re-numbering ``j ↦ index[j]`` is strictly monotone, the (weight,
+    edge-id) lexicographic election order of ``sub`` matches the original
+    order restricted to the subset — an engine forest over ``sub`` is the
+    restriction of the order-equivalent forest over the input.  This is
+    how the filter pass re-partitions survivors: the subset graph flows
+    through :func:`build_edge_layout` under ANY partitioner.
+    """
+    mask = np.asarray(mask, dtype=bool)
+    index = np.flatnonzero(mask).astype(np.int64)
+    sub = Graph(num_vertices=graph.num_vertices,
+                src=graph.src[index], dst=graph.dst[index],
+                weight=graph.weight[index])
+    return sub, index
+
+
+def lift_mask(index: np.ndarray, sub_mask: np.ndarray,
+              num_edges: int) -> np.ndarray:
+    """Map a subset-edge bitmap back to canonical edge ids
+    (inverse of :func:`subgraph_by_mask`'s re-numbering)."""
+    sub_mask = np.asarray(sub_mask, dtype=bool)
+    mask = np.zeros(num_edges, dtype=bool)
+    mask[index[sub_mask]] = True
+    return mask
+
+
 def relabel_graph(graph: Graph, perm: np.ndarray) -> Graph:
     """Apply a vertex relabeling WITHOUT touching edge order or weights.
 

@@ -240,6 +240,64 @@ def raw_samples(spec: GraphSpec, xp=np, ctr=None):
 
 
 # ---------------------------------------------------------------------------
+# Edge sampling (DESIGN.md §10) — the Filter-Borůvka counter-based sampler
+# ---------------------------------------------------------------------------
+# A sample decision is a pure function of (seed, canonical edge id) built on
+# the same splitmix64 finalizer as the generators, written once against the
+# array namespace — so the numpy oracle and any jitted/sharded evaluation are
+# byte-identical, and the decision for edge i never depends on which shard
+# holds it (determinism at ANY shard count, the §10 contract).
+
+_SAMPLE_STREAM = 0x5A17                 # disjoint from generator streams
+
+def sample_mask(seed: int, rate: float, eid):
+    """Bernoulli(rate) keep-mask over canonical edge ids (numpy or jnp).
+
+    ``eid`` is a uint64 array of canonical edge ids; ``rate`` is a host
+    float.  Endpoints are exact: rate ≤ 0 keeps nothing (the empty-sample
+    path the filter driver must survive), rate ≥ 1 keeps everything.
+    """
+    eid = eid.astype(np.uint64)
+    if rate <= 0.0:
+        return eid != eid
+    if rate >= 1.0:
+        return eid == eid
+    thresh = np.uint64(int(rate * 2.0 ** 64))
+    return _rand_u64(seed, _SAMPLE_STREAM, eid) < thresh
+
+
+def sample_mask_fixed_k(xp, seed: int, k: int, eid):
+    """Fixed-size variant: keep exactly the ``k`` smallest splitmix64 draws.
+
+    The k-th draw is a GLOBAL order statistic, so this must be evaluated
+    over the full edge-id range to stay shard-count invariant (the driver
+    defaults to the Bernoulli form, which needs no global pass)."""
+    eid = eid.astype(np.uint64)
+    if k <= 0:
+        return eid != eid
+    if k >= int(eid.shape[0]):
+        return eid == eid
+    h = _rand_u64(seed, _SAMPLE_STREAM, eid)
+    kth = xp.sort(h)[k - 1]
+    return h <= kth                     # draws are distinct w.h.p.; ties only
+                                        # ever widen the sample, never drop it
+
+
+def sample_device_edges(edges: "DeviceEdges", rate: float, seed: int = 0):
+    """Device-resident Bernoulli sample over a :class:`DeviceEdges` buffer.
+
+    Returns a (capacity,) bool device array carrying the edge sharding of
+    ``edges`` — the decision reads each slot's canonical edge id from the
+    key's low lane, so it is invariant to how slots are distributed.
+    Padding slots (INF keys) are never sampled.
+    """
+    from jax.experimental import enable_x64
+    with enable_x64():
+        eid = edges.key & np.uint64(0xFFFFFFFF)
+        return sample_mask(seed, rate, eid) & (edges.key != keys_lib.INF_KEY)
+
+
+# ---------------------------------------------------------------------------
 # Host oracle
 # ---------------------------------------------------------------------------
 

@@ -67,11 +67,18 @@ class EngineStats:
     ``rounds_per_graph`` is filled by batched drivers (DESIGN.md §8): one
     round/superstep count per input graph, in input order.  Single-graph
     engines leave it empty.
+
+    ``edges_filtered`` / ``filter_passes`` are filled by the Filter-Borůvka
+    sampling hybrid (DESIGN.md §10): edges proven non-MSF by the cycle-rule
+    connectivity probe and the number of sample→solve→filter passes run.
+    Engines without a filter stage leave them 0.
     """
 
     host_syncs: int = 0
     intervals: int = 0
     rounds_per_graph: tuple = ()
+    edges_filtered: int = 0
+    filter_passes: int = 0
 
 
 def donation(*argnums: int) -> Tuple[int, ...]:

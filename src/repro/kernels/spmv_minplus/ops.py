@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import keys as keys_lib
+from repro.core import union_find
 from repro.kernels.spmv_minplus import ref
 from repro.kernels.spmv_minplus.spmv_minplus import (
     masked_minplus_scan, pointer_jump)
@@ -141,6 +142,72 @@ def elect(
         return _elect_pallas(cs, cd, key, num_segments=num_segments,
                              block=block, interpret=interpret)
     return ref.elect(cs, cd, key, num_segments=num_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "axis_name",
+                                             "use_pallas", "interpret"))
+def connected_labels(
+    src: jnp.ndarray, dst: jnp.ndarray, active: jnp.ndarray, *,
+    num_vertices: int, init: "jnp.ndarray | None" = None,
+    axis_name: "str | None" = None,
+    use_pallas: bool = False, interpret: bool = True,
+) -> jnp.ndarray:
+    """Converged connected-component labels over the active edge set.
+
+    The batched cut/cycle probe of the filter pass (DESIGN.md §10): a
+    ``lax.while_loop`` of min-hooking + pointer-jump shortcut that runs
+    until no active edge crosses two components.  Every iteration with a
+    crossing edge strictly reduces the component count, so the loop
+    terminates; the result labels each vertex with the minimum vertex id
+    of its component (a canonical labeling — comparable across callers).
+
+    ``init`` warm-starts the loop from an existing labeling whose equal
+    labels are already certified connected under ``active`` — the
+    incremental path of the filter's nested threshold levels (level *j*
+    refines level *j-1*'s labels, so only newly-activated edges pay
+    iterations).  Canonical min-id labels stay canonical under refinement.
+
+    ``active`` must be False on padding lanes; endpoints are clipped before
+    the gather so out-of-range pad vertices (``PAD_VERTEX``) are safe.
+    Under ``shard_map`` pass ``axis_name`` to combine the per-shard hook
+    contributions (pmin) and the per-shard liveness flag (pmax) — the
+    labels are then replicated and identical on every shard.  The body is
+    also vmappable (batched probes share one compiled loop).
+    """
+    n = num_vertices
+    src = jnp.clip(src, 0, n - 1)
+    dst = jnp.clip(dst, 0, n - 1)
+
+    def crossing(comp):
+        cs = comp[src]
+        cd = comp[dst]
+        return cs, cd, active & (cs != cd)
+
+    def alive_any(alive):
+        more = jnp.any(alive)
+        if axis_name is not None:
+            more = jax.lax.pmax(more.astype(jnp.int32), axis_name) > 0
+        return more
+
+    def body(carry):
+        comp, _ = carry
+        cs, cd, alive = crossing(comp)
+        hi = jnp.maximum(cs, cd)
+        lo = jnp.minimum(cs, cd)
+        parent = union_find.hook_min(n, hi, lo, alive)
+        if axis_name is not None:
+            parent = jax.lax.pmin(parent, axis_name)
+        comp = shortcut_relabel(parent.astype(jnp.int32), comp,
+                                use_pallas=use_pallas, interpret=interpret)
+        _, _, alive2 = crossing(comp)
+        return comp, alive_any(alive2)
+
+    comp0 = (jnp.arange(n, dtype=jnp.int32) if init is None
+             else init.astype(jnp.int32))
+    _, _, alive0 = crossing(comp0)
+    comp, _ = jax.lax.while_loop(lambda c: c[1], body,
+                                 (comp0, alive_any(alive0)))
+    return comp
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -1,87 +1,245 @@
 """Weak scaling — P shards solve a graph that grows with P (paper Fig 5).
 
-Pins 8 forced host devices ONCE through ``repro.platform`` (the backend-
-pinning contract every bench leg follows), then builds 1/2/4/8-shard
+Pins 16 forced host devices ONCE through ``repro.platform`` (the backend-
+pinning contract every bench leg follows), then builds 1/2/4/8/16-shard
 meshes from that device pool in a single process — no subprocess per cell.
-Each row P solves rmat ``base + log2 P`` (edges double with the shard
-count, the weak-scaling regime) through the filter-Borůvka path
-(``method="filter_boruvka"``, DESIGN.md §10), with the plain Borůvka
-engine timed alongside for reference.
+Each row P drives FOUR paths over rmat ``base + log2 P`` (edges double
+with the shard count, the weak-scaling regime):
 
-CAVEAT (printed with the results): this container has ONE physical core,
-so forced host devices time-slice — wall-clock cannot show real weak
-scaling.  The honest observables are edges/s per shard and the
-filter's survivor counts, which determine the communicated volume.
+* ``boruvka`` with ``collective="pmin"``   — dense per-round reduction;
+* ``boruvka`` with ``collective="compressed"`` — the DESIGN.md §11 delta
+  exchange (packed candidate ring, bit-identity fallback);
+* ``filter_boruvka`` — sample→solve→filter→solve (DESIGN.md §10);
+* ``ghs``            — the paper-faithful message engine (capped scale:
+  its superstep count grows with diameter, so it rides a smaller graph);
+
+plus the batched serving path (``minimum_spanning_forests``) with a batch
+that grows with P.  Every row cross-checks all masks against the Kruskal
+oracle, records per-row ``host_syncs`` / ``intervals`` / overlap counters
+uniformly, and captures the per-ROUND collective bytes of the dense vs
+compressed reduction from a ``check_frequency=1`` probe pair — the honest
+"what actually crossed the wire" comparison.  Emits
+``BENCH_weak_scaling.json``.
+
+CAVEAT (printed and recorded): this container has ONE physical core, so
+forced host devices time-slice — wall-clock cannot show real weak
+scaling.  The honest observables are edges/s per shard, host syncs per
+solve, and the on-wire byte series.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_weak_scaling.py
+    PYTHONPATH=src python benchmarks/bench_weak_scaling.py --smoke  # CI
 """
 from __future__ import annotations
 
 import argparse
+import json
 import math
+import os
 import time
 
 from common import pin_backend
 
-DEVICES = 8
+DEVICES = 16
 
 
-def run_row(kind: str, scale: int, shards: int, rate: float) -> dict:
+def _stats_row(st, dt: float, num_edges: int, shards: int) -> dict:
+    """The uniform per-path record: timing + the runtime sync ledger."""
+    return dict(
+        seconds=dt, meps=num_edges / dt / 1e6,
+        meps_per_shard=num_edges / dt / 1e6 / shards,
+        host_syncs=st.host_syncs, intervals=st.intervals,
+        overlapped_syncs=st.overlapped_syncs,
+        speculative_intervals=st.speculative_intervals,
+        comm_bytes=st.comm_bytes)
+
+
+def _comm_records(st) -> list:
+    return [dict(mode=m, cand_cap=int(c), rounds=int(r), bytes=int(b))
+            for (m, c, r, b) in st.comm_history]
+
+
+def _comm_probe(g, mesh, shards: int, rate: float) -> dict:
+    """Per-ROUND on-wire bytes, dense vs compressed (check_frequency=1).
+
+    One interval per round makes each ``comm_history`` entry a single
+    round, so the two series are directly comparable round-by-round.
+    ``reduction_beyond_round1`` is dense-per-round divided by the
+    SMALLEST compressed per-round bytes after round 1 — how far the delta
+    exchange shrinks the wire once fragments start merging.
+    """
+    import numpy as np
+    from repro.core.mst_api import minimum_spanning_forest
+    from repro.core.params import GHSParams
+
+    series = {}
+    masks = {}
+    for coll in ("pmin", "compressed"):
+        params = GHSParams(filter_sample_rate=rate, check_frequency=1,
+                           collective=coll, interval_pipeline=0)
+        res, st = minimum_spanning_forest(g, method="boruvka", params=params,
+                                          mesh=mesh)
+        masks[coll] = np.asarray(res.edge_mask)
+        series[coll] = _comm_records(st)
+    if not np.array_equal(masks["pmin"], masks["compressed"]):
+        raise SystemExit("comm probe: compressed forest diverged from pmin")
+    dense_rows = [r for r in series["pmin"] if r["rounds"]]
+    comp_rows = [r for r in series["compressed"] if r["rounds"]]
+    dense_per_round = dense_rows[0]["bytes"] if dense_rows else 0
+    beyond = [r["bytes"] for r in comp_rows[1:]] or [dense_per_round]
+    out = dict(
+        dense_per_round=[r["bytes"] for r in dense_rows],
+        compressed_per_round=comp_rows,
+        dense_bytes_total=sum(r["bytes"] for r in dense_rows),
+        compressed_bytes_total=sum(r["bytes"] for r in comp_rows),
+        reduction_beyond_round1=(
+            1.0 if not dense_per_round else
+            dense_per_round / min(beyond) if min(beyond) else float("inf")))
+    return out
+
+
+def run_row(kind: str, scale: int, shards: int, rate: float,
+            ghs_scale: int, batch_scale: int) -> dict:
     import numpy as np
     from repro.compat import make_mesh
-    from repro.core import generators
-    from repro.core.mst_api import minimum_spanning_forest
+    from repro.core import generators, kruskal_ref
+    from repro.core.mst_api import (minimum_spanning_forest,
+                                    minimum_spanning_forests)
     from repro.core.params import GHSParams
 
     mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
     g = generators.generate(kind, scale, seed=1)
-    params = GHSParams(filter_sample_rate=rate)
+    want = kruskal_ref.kruskal(g).edge_mask
     row = dict(shards=shards, scale=scale, num_vertices=g.num_vertices,
                num_edges=g.num_edges)
-    masks = {}
-    for method in ("filter_boruvka", "boruvka"):
+
+    # --- the two Borůvka collectives + filter-Borůvka, timed -------------
+    paths = [("boruvka_pmin", "boruvka", "pmin"),
+             ("boruvka_compressed", "boruvka", "compressed"),
+             ("filter_boruvka", "filter_boruvka", "compressed")]
+    ok = True
+    for name, method, coll in paths:
+        params = GHSParams(filter_sample_rate=rate, collective=coll)
         minimum_spanning_forest(g, method=method, params=params,
                                 mesh=mesh)                 # warm / compile
         t0 = time.perf_counter()
         res, st = minimum_spanning_forest(g, method=method, params=params,
                                           mesh=mesh)
         dt = time.perf_counter() - t0
-        masks[method] = res.edge_mask
-        row[method] = dict(seconds=dt, meps=g.num_edges / dt / 1e6,
-                           meps_per_shard=g.num_edges / dt / 1e6 / shards)
-    assert np.array_equal(masks["filter_boruvka"], masks["boruvka"]), \
-        (kind, scale, shards)
-    fr = row["filter_boruvka"]
-    row["speedup"] = row["boruvka"]["seconds"] / fr["seconds"]
+        ok &= bool(np.array_equal(np.asarray(res.edge_mask), want))
+        row[name] = _stats_row(st, dt, g.num_edges, shards)
+        if name.startswith("boruvka"):
+            row[name]["rounds"] = st.rounds
+            row[name]["comm_history"] = _comm_records(st)
+
+    # --- per-round wire bytes, dense vs compressed -----------------------
+    row["comm"] = _comm_probe(g, mesh, shards, rate)
+
+    # --- GHS message engine (capped scale: supersteps ~ diameter) --------
+    gg = g if ghs_scale == scale else generators.generate(kind, ghs_scale,
+                                                          seed=1)
+    ghs_want = (want if gg is g
+                else kruskal_ref.kruskal(gg).edge_mask)
+    params = GHSParams(filter_sample_rate=rate)
+    minimum_spanning_forest(gg, method="ghs", params=params, mesh=mesh)
+    t0 = time.perf_counter()
+    res, st = minimum_spanning_forest(gg, method="ghs", params=params,
+                                      mesh=mesh)
+    dt = time.perf_counter() - t0
+    ok &= bool(np.array_equal(np.asarray(res.edge_mask), ghs_want))
+    row["ghs"] = _stats_row(st, dt, gg.num_edges, shards)
+    row["ghs"].update(scale=ghs_scale, supersteps=st.supersteps)
+
+    # --- batched serving path: batch grows with P ------------------------
+    graphs = [generators.generate(kind, batch_scale, seed=s)
+              for s in range(1, shards + 1)]
+    minimum_spanning_forests(graphs)                       # warm / compile
+    t0 = time.perf_counter()
+    forests, bst = minimum_spanning_forests(graphs)
+    dt = time.perf_counter() - t0
+    for bg, f in zip(graphs, forests):
+        ok &= bool(np.array_equal(np.asarray(f.edge_mask),
+                                  kruskal_ref.kruskal(bg).edge_mask))
+    edges = sum(bg.num_edges for bg in graphs)
+    row["batched"] = _stats_row(bst, dt, edges, shards)
+    row["batched"].update(batch=len(graphs), batch_scale=batch_scale,
+                          graphs_per_s=len(graphs) / dt)
+
+    row["all_bit_identical"] = ok
+    if not ok:
+        raise SystemExit(f"weak scaling row diverged from Kruskal: "
+                         f"{kind} scale={scale} shards={shards}")
     return row
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--base-scale", type=int, default=13,
+    ap.add_argument("--base-scale", type=int, default=10,
                     help="shards=1 graph scale; P shards solve "
                          "base + log2 P")
     ap.add_argument("--kind", default="rmat")
     ap.add_argument("--rate", type=float, default=0.15)
+    ap.add_argument("--shards", default="1,2,4,8,16",
+                    help="comma-separated shard counts (each <= 16)")
+    ap.add_argument("--ghs-max-scale", type=int, default=8,
+                    help="cap the GHS row scale (the message engine's "
+                         "superstep count grows with graph diameter, and "
+                         "time-sliced shards pay it per superstep)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: base scale 7, shards 1,8,16")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_weak_scaling.json"))
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.base_scale = min(args.base_scale, 7)
+        args.shards = "1,8,16"
+        args.ghs_max_scale = min(args.ghs_max_scale, 6)
+    shard_counts = tuple(int(s) for s in args.shards.split(","))
 
     pin_backend("cpu", host_devices=DEVICES)
 
+    caveat = ("1-core container: forced host devices time-slice; edges/s "
+              "per shard, host syncs and on-wire bytes are the honest "
+              "observables")
     print(f"# weak scaling — {args.kind}, P shards solve scale "
           f"base+log2 P (base {args.base_scale}), {DEVICES} forced host "
-          f"devices, filter-Borůvka vs plain")
-    print("# (1-core container: shards time-slice; edges/s-per-shard is "
-          "the honest observable)")
-    print(f"{'P':>3s} {'scale':>6s} {'edges':>9s} {'filter_s':>9s} "
-          f"{'plain_s':>8s} {'speedup':>8s} {'Meps/shard':>11s}")
+          f"devices; boruvka pmin vs compressed, filter, ghs, batched")
+    print(f"# ({caveat})")
+    print(f"{'P':>3s} {'scale':>6s} {'edges':>9s} {'plain_s':>8s} "
+          f"{'comp_s':>7s} {'filter_s':>9s} {'ghs_s':>6s} {'batch_s':>8s} "
+          f"{'syncs':>6s} {'wire_dense':>11s} {'wire_comp':>10s} "
+          f"{'drop>r1':>8s}")
     rows = []
-    for shards in (1, 2, 4, 8):
+    for shards in shard_counts:
         scale = args.base_scale + int(math.log2(shards))
-        r = run_row(args.kind, scale, shards, args.rate)
+        r = run_row(args.kind, scale, shards, args.rate,
+                    min(scale, args.ghs_max_scale),
+                    max(args.base_scale - 3, 4))
+        c = r["comm"]
         print(f"{shards:3d} {scale:6d} {r['num_edges']:9d} "
+              f"{r['boruvka_pmin']['seconds']:8.2f} "
+              f"{r['boruvka_compressed']['seconds']:7.2f} "
               f"{r['filter_boruvka']['seconds']:9.2f} "
-              f"{r['boruvka']['seconds']:8.2f} {r['speedup']:7.2f}x "
-              f"{r['filter_boruvka']['meps_per_shard']:11.2f}")
+              f"{r['ghs']['seconds']:6.2f} {r['batched']['seconds']:8.2f} "
+              f"{r['boruvka_compressed']['host_syncs']:6d} "
+              f"{c['dense_bytes_total']:11d} "
+              f"{c['compressed_bytes_total']:10d} "
+              f"{c['reduction_beyond_round1']:7.1f}x")
         rows.append(r)
-    return rows
+
+    record = dict(kind=args.kind, base_scale=args.base_scale,
+                  devices=DEVICES, rate=args.rate,
+                  shard_counts=list(shard_counts),
+                  ghs_max_scale=args.ghs_max_scale,
+                  caveat=caveat, rows=rows,
+                  all_bit_identical=all(r["all_bit_identical"]
+                                        for r in rows))
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out}")
+    return record
 
 
 if __name__ == "__main__":

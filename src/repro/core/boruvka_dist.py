@@ -52,6 +52,7 @@ from repro.core import union_find
 from repro.core.graph import PAD_VERTEX, Graph
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
+from repro.sharding import collectives
 
 INF32 = np.uint32(0xFFFFFFFF)
 INF_KEY = keys_lib.INF_KEY
@@ -80,6 +81,31 @@ def _pad_pow2(arrs, multiple: int, fill_vals):
 _pow2ceil = partition_lib.pow2ceil
 
 
+def _make_pmin(axis_name: Optional[str], collective: str,
+               cand_cap: Optional[int], num_shards: int) -> Callable:
+    """``pmin(x, default)`` closure for the round bodies.
+
+    Identity off-mesh; full-width ``lax.pmin`` for ``collective="pmin"``
+    (or when no candidate cap is in effect); the compressed delta exchange
+    (:func:`repro.sharding.collectives.pmin_compressed`, DESIGN.md §11)
+    otherwise.  ``default`` is the per-index baseline a shard contributes
+    when its local edges did not improve the entry (``INF_KEY`` for MOE
+    keys, the identity parent for hook requests) — the compressed path
+    ships only the ``x != default`` entries.
+    """
+    if axis_name is None:
+        return lambda x, default=None: x
+    if collective != "compressed" or cand_cap is None:
+        return lambda x, default=None: jax.lax.pmin(x, axis_name)
+
+    def pmin(x, default):
+        return collectives.pmin_compressed(
+            x, axis_name, default=default, cap=cand_cap,
+            num_shards=num_shards)
+
+    return pmin
+
+
 @dataclasses.dataclass
 class BoruvkaStats(runtime.EngineStats):
     # host_syncs / intervals inherited from the runtime protocol; for the
@@ -90,6 +116,13 @@ class BoruvkaStats(runtime.EngineStats):
     active_history: tuple = ()      # host loop: global active edges per round;
                                     # device loop: MAX per-shard active count
                                     # per interval (the compaction-cap census)
+    comm_history: tuple = ()        # device loop: one (mode, cand_cap,
+                                    # rounds, bytes) record per consumed
+                                    # interval — per-shard on-wire bytes of
+                                    # the round collectives under the
+                                    # DESIGN.md §11 wire model (mode is the
+                                    # executable actually dispatched:
+                                    # 'pmin' or 'compressed')
 
 
 # ---------------------------------------------------------------------------
@@ -128,7 +161,7 @@ def _one_round(
     best = segops.segment_min64(
         jnp.concatenate([k, k]), seg, num_segments=n,
         use_pallas=use_pallas)
-    best = pmin(best)
+    best = pmin(best, INF_KEY)
     winners = alive & ((best[cs] == k) | (best[cd] == k))
     # Record wins into the sharded bitmap; an edge's bitmap slot lives on
     # the shard that loaded it (compaction is shard-local), so the
@@ -138,7 +171,7 @@ def _one_round(
     hi = jnp.maximum(cs, cd).astype(jnp.uint32)
     lo = jnp.minimum(cs, cd).astype(jnp.uint32)
     parent = union_find.hook_min(n, hi, lo, winners)
-    parent = pmin(parent)
+    parent = pmin(parent, jnp.arange(n, dtype=jnp.uint32))
     parent = union_find.pointer_double(parent)
     done = jnp.all(best == INF_KEY)
     return parent[comp], mask, done
@@ -155,6 +188,9 @@ def _run_interval(
     *,
     axis_name: Optional[str],
     use_pallas: bool,
+    collective: str = "pmin",
+    cand_cap: Optional[int] = None,
+    num_shards: int = 1,
 ):
     """Advance up to ``rounds`` Borůvka rounds entirely on device.
 
@@ -164,10 +200,15 @@ def _run_interval(
     the (possibly compacted) local edge arrays.  Each edge carries its own
     load-time ``slot`` index, so winner recording is a local scatter under
     ANY partition and survives compaction.  Returns the new state plus a
-    replicated (done, rounds-run, max local active count) triple — the ONLY
-    values the host ever reads.
+    replicated (done, rounds-run, max local active count, max local
+    candidate count) vector — the ONLY values the host ever reads.
+
+    ``collective``/``cand_cap`` pick the cross-shard reduction (DESIGN.md
+    §11): full-width ``lax.pmin`` or the compressed delta exchange with a
+    static per-shard candidate cap (the host re-caps per interval from the
+    candidate census below).
     """
-    pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
+    pmin = _make_pmin(axis_name, collective, cand_cap, num_shards)
 
     def one_round(comp, mask):
         return _one_round(comp, mask, src, dst, key, slot,
@@ -185,12 +226,25 @@ def _run_interval(
     r, comp, mask, done = jax.lax.while_loop(
         cond, body, (jnp.int32(0), comp, mask, jnp.bool_(False)))
 
-    # Active-edge census for the host's compaction-bucket choice.
+    # Active-edge census for the host's compaction-bucket choice, plus the
+    # candidate census for the compressed-collective cap: distinct
+    # fragments touched by local active edges bound every entry a shard
+    # can improve in ANY later round (fragments only merge and edges only
+    # die, so the count is non-increasing — valid even consumed one
+    # interval late under the double-buffered driver).
     active = (comp[src] != comp[dst]) & (key != INF_KEY)
     n_active = active.sum(dtype=jnp.int32)
+    n = comp.shape[0]
+    seg = jnp.concatenate([comp[src], comp[dst]]).astype(jnp.uint32)
+    seg = jnp.where(jnp.concatenate([active, active]), seg, jnp.uint32(n))
+    (seg,) = jax.lax.sort((seg,), num_keys=1)
+    first = (seg != jnp.uint32(n)) & jnp.concatenate(
+        [jnp.ones((1,), bool), seg[1:] != seg[:-1]])
+    n_cand = first.sum(dtype=jnp.int32)
     if axis_name:
         n_active = jax.lax.pmax(n_active, axis_name)
-    return comp, mask, done, r, n_active
+        n_cand = jax.lax.pmax(n_cand, axis_name)
+    return comp, mask, done, r, n_active, n_cand
 
 
 def _one_round_fused(
@@ -239,7 +293,7 @@ def _one_round_fused(
     cd = comp[dst]
     best = spmv_ops.elect(cs, cd, key, num_segments=n, lowering=lowering,
                           sort_bits=sort_bits)
-    best = pmin(best)
+    best = pmin(best, INF_KEY)
     elected = best != INF_KEY
     eid = keys_lib.unpack_edge_id(best)      # 0xFFFFFFFF when not elected
     mask = mask.at[jnp.where(elected, eid, jnp.uint32(m))].set(
@@ -272,6 +326,9 @@ def _run_interval_fused(
     axis_name: Optional[str],
     lowering: str,
     sort_bits,
+    collective: str = "pmin",
+    cand_cap: Optional[int] = None,
+    num_shards: int = 1,
 ):
     """:func:`_run_interval` with the fused round body (round_kernel="pallas").
 
@@ -279,9 +336,12 @@ def _run_interval_fused(
     indexed and REPLICATED (every shard derives the same writes from the
     globally-reduced election, so no slot side-lane and no final remap),
     and the per-edge ``slot`` array is not consumed — compaction still
-    threads it through the engine state for shape uniformity.
+    threads it through the engine state for shape uniformity.  The round's
+    single collective routes through the same ``collective``/``cand_cap``
+    selection as the XLA interval (hooking needs the globally-reduced
+    ``best``, and the compressed exchange returns exactly that).
     """
-    pmin = (lambda x: jax.lax.pmin(x, axis_name)) if axis_name else (lambda x: x)
+    pmin = _make_pmin(axis_name, collective, cand_cap, num_shards)
 
     def one_round(comp, mask):
         return _one_round_fused(comp, mask, src, dst, key, csrc, cdst,
@@ -300,29 +360,46 @@ def _run_interval_fused(
     r, comp, mask, done = jax.lax.while_loop(
         cond, body, (jnp.int32(0), comp, mask, jnp.bool_(False)))
 
+    # Same censuses as _run_interval (active for compaction, distinct
+    # touched fragments for the compressed-collective cap).
     active = (comp[src] != comp[dst]) & (key != INF_KEY)
     n_active = active.sum(dtype=jnp.int32)
+    n = comp.shape[0]
+    seg = jnp.concatenate([comp[src], comp[dst]]).astype(jnp.uint32)
+    seg = jnp.where(jnp.concatenate([active, active]), seg, jnp.uint32(n))
+    (seg,) = jax.lax.sort((seg,), num_keys=1)
+    first = (seg != jnp.uint32(n)) & jnp.concatenate(
+        [jnp.ones((1,), bool), seg[1:] != seg[:-1]])
+    n_cand = first.sum(dtype=jnp.int32)
     if axis_name:
         n_active = jax.lax.pmax(n_active, axis_name)
-    return comp, mask, done, r, n_active
+        n_cand = jax.lax.pmax(n_cand, axis_name)
+    return comp, mask, done, r, n_active, n_cand
 
 
 @functools.lru_cache(maxsize=64)
 def _build_interval_fn_fused(
-        mesh: Optional[Mesh], lowering: str, sort_bits) -> Callable:
+        mesh: Optional[Mesh], lowering: str, sort_bits,
+        collective: str = "pmin",
+        cand_cap: Optional[int] = None) -> Callable:
+    # cand_cap is part of the cache key: compressed caps are power-of-two
+    # and shrink monotonically with the census, so at most log2(n) variants
+    # compile per solve (same budget as the compaction buckets).
     donate = runtime.donation(0, 1)
     if mesh is None:
         fn = partial(_run_interval_fused, axis_name=None, lowering=lowering,
                      sort_bits=sort_bits)
         return jax.jit(fn, donate_argnums=donate)
+    num_shards = int(np.prod(mesh.devices.shape))
     fn = compat.shard_map(
         partial(_run_interval_fused, axis_name=_AXIS, lowering=lowering,
-                sort_bits=sort_bits),
+                sort_bits=sort_bits, collective=collective,
+                cand_cap=cand_cap, num_shards=num_shards),
         mesh,
         # mask + canonical endpoints replicated (see _run_interval_fused);
         # only the edge working set is sharded.
         in_specs=(P(), P(), P(_AXIS), P(_AXIS), P(_AXIS), P(), P(), P()),
-        out_specs=(P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P(), P()),
     )
     return jax.jit(fn, donate_argnums=donate)
 
@@ -354,20 +431,26 @@ def _compact_shard(comp, src, dst, key, slot, *, cap: int):
 
 
 @functools.lru_cache(maxsize=64)
-def _build_interval_fn(mesh: Optional[Mesh], use_pallas: bool) -> Callable:
+def _build_interval_fn(mesh: Optional[Mesh], use_pallas: bool,
+                       collective: str = "pmin",
+                       cand_cap: Optional[int] = None) -> Callable:
     # rounds is a traced scalar, so one executable serves every interval
     # length and graph size per (mesh, shapes).  comp/mask are the mutated
-    # state — donate so device buffers are reused in place.
+    # state — donate so device buffers are reused in place.  cand_cap is
+    # static (see _build_interval_fn_fused for the recompile budget).
     donate = runtime.donation(0, 1)
     if mesh is None:
         fn = partial(_run_interval, axis_name=None, use_pallas=use_pallas)
         return jax.jit(fn, donate_argnums=donate)
+    num_shards = int(np.prod(mesh.devices.shape))
     fn = compat.shard_map(
-        partial(_run_interval, axis_name=_AXIS, use_pallas=use_pallas),
+        partial(_run_interval, axis_name=_AXIS, use_pallas=use_pallas,
+                collective=collective, cand_cap=cand_cap,
+                num_shards=num_shards),
         mesh,
         in_specs=(P(), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS),
                   P()),
-        out_specs=(P(), P(_AXIS), P(), P(), P()),
+        out_specs=(P(), P(_AXIS), P(), P(), P(), P()),
     )
     return jax.jit(fn, donate_argnums=donate)
 
@@ -437,39 +520,92 @@ def _device_engine(
                 sort_bits = None   # host weights outside (0, 1): no sort key
             lowering = ("pallas" if params.use_pallas
                         else "sort" if sort_bits is not None else "scatter")
-            fn = _build_interval_fn_fused(
-                mesh, lowering, sort_bits if lowering == "sort" else None)
+            sb = sort_bits if lowering == "sort" else None
+            fn_pmin = _build_interval_fn_fused(mesh, lowering, sb)
         else:
+            lowering = sb = None
             mask_dev = put(np.zeros(m0, dtype=bool), edge_sh)
-            fn = _build_interval_fn(mesh, params.use_pallas)
+            fn_pmin = _build_interval_fn(mesh, params.use_pallas)
 
+        collective = runtime.resolve_collective(params.collective)
+        overlap = (runtime.resolve_interval_pipeline(
+            params.interval_pipeline) == 1)
         interval = max(params.check_frequency, 1)
         cap_rounds = max_rounds or (n + 2)
         stats = BoruvkaStats()
         history = []
-        box = dict(cur_block=layout.block)
+        comm_hist = []
+        # Value lanes of the per-round reductions, for the §11 wire model:
+        # xla rounds exchange best (uint64) + hook parents (uint32); fused
+        # rounds have ONE collective, best only.
+        value_bytes = (8,) if fused else (8, 4)
+        # cand_bound: upper bound on any shard's per-round candidate count
+        # for the NEXT dispatch — refreshed from the interval's
+        # distinct-touched-fragments census, which is non-increasing
+        # across rounds, so it stays a valid bound even when finish runs
+        # one interval late (overlap).  Pre-census bound: each local edge
+        # touches at most two fragments.
+        box = dict(cur_block=layout.block, dispatched=0, inflight=[],
+                   cand_bound=min(n, 2 * layout.block))
+
+        def pick_fn():
+            """Select the next dispatch's interval executable + §11 byte
+            model: the compressed delta exchange with the census-derived
+            candidate cap when its wire model beats full-width pmin, the
+            dense pmin executable otherwise (bit-identical either way)."""
+            full_b = sum(collectives.dense_bytes(n, num_shards, vb)
+                         for vb in value_bytes)
+            if num_shards > 1 and collective == "compressed":
+                cand_cap = max(_pow2ceil(box["cand_bound"]), 8)
+                comp_b = sum(
+                    collectives.compressed_bytes(cand_cap, num_shards, vb)
+                    for vb in value_bytes)
+                if comp_b < full_b:
+                    f = (_build_interval_fn_fused(
+                            mesh, lowering, sb, "compressed", cand_cap)
+                         if fused else
+                         _build_interval_fn(mesh, params.use_pallas,
+                                            "compressed", cand_cap))
+                    return f, "compressed", cand_cap, comp_b
+            return fn_pmin, "pmin", 0, full_b
 
         def dispatch(s):
             comp_dev, mask_dev, src_d, dst_d, key_d, slot_d = s
-            this_rounds = min(interval, cap_rounds - stats.rounds)
+            # Clamp by the DISPATCHED total, not stats.rounds: under
+            # overlap a dispatch happens before the previous interval's
+            # readback is consumed.
+            this_rounds = max(min(interval, cap_rounds - box["dispatched"]),
+                              0)
+            f, mode, cand_cap, bytes_per_round = pick_fn()
             if fused:
-                comp_dev, mask_dev, done_t, r_t, act_t = fn(
+                comp_dev, mask_dev, done_t, r_t, act_t, cand_t = f(
                     comp_dev, mask_dev, src_d, dst_d, key_d, csrc_d, cdst_d,
                     this_rounds)
             else:
-                comp_dev, mask_dev, done_t, r_t, act_t = fn(
+                comp_dev, mask_dev, done_t, r_t, act_t, cand_t = f(
                     comp_dev, mask_dev, src_d, dst_d, key_d, slot_d,
                     this_rounds)
-            # The interval's scalar summary: three replicated values,
+            box["dispatched"] += this_rounds
+            # FIFO of per-dispatch ledger records; finish pops the OLDEST
+            # (it may run one interval late under overlap) and scales by
+            # the rounds the interval actually ran.
+            box["inflight"].append(
+                (mode, cand_cap, box["cur_block"], bytes_per_round))
+            # The interval's scalar summary: four replicated values,
             # fetched by the runtime with ONE device_get.
             return (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d), \
-                (done_t, r_t, act_t)
+                (done_t, r_t, act_t, cand_t)
 
         def finish(s, vals):
-            done_v, r, n_act = vals
-            stats.rounds += int(r)
-            stats.edges_scanned += int(r) * box["cur_block"] * num_shards
+            done_v, r, n_act, n_cand = vals
+            mode, cand_cap, blk, bytes_per_round = box["inflight"].pop(0)
+            r = int(r)
+            stats.rounds += r
+            stats.edges_scanned += r * blk * num_shards
+            stats.comm_bytes += r * bytes_per_round
+            comm_hist.append((mode, cand_cap, r, r * bytes_per_round))
             history.append(int(n_act))
+            box["cand_bound"] = max(min(n, int(n_cand)), 1)
             if bool(done_v):
                 return s, True
             if params.compaction == "pow2":
@@ -487,7 +623,8 @@ def _device_engine(
         comp_dev, mask_dev = runtime.interval_loop(
             (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d), dispatch,
             finish, stats=stats, max_intervals=cap_rounds,
-            fail_msg="Borůvka engine failed to converge")[:2]
+            fail_msg="Borůvka engine failed to converge",
+            overlap=overlap)[:2]
 
         comp_final, mask_full = jax.device_get((comp_dev, mask_dev))
         stats.host_syncs += 1
@@ -504,6 +641,7 @@ def _device_engine(
     res = runtime.forest_from_mask(bundle.graph(), mask, num_components=ncomp)
     res.check_consistent(n)
     stats.active_history = tuple(history)
+    stats.comm_history = tuple(comm_hist)
     return res, stats
 
 
@@ -533,6 +671,10 @@ class BatchStats(BoruvkaStats):
         self.compactions += st.compactions
         self.edges_scanned += st.edges_scanned
         self.active_history += st.active_history
+        self.overlapped_syncs += st.overlapped_syncs
+        self.speculative_intervals += st.speculative_intervals
+        self.comm_bytes += st.comm_bytes
+        self.comm_history += st.comm_history
 
 
 def _one_round_packed(comp, mask, src, dst, key, slot, *,
@@ -691,7 +833,7 @@ def _run_interval_batch(
         step = jax.vmap(partial(_one_round_packed, s_bits=s_bits,
                                 c_bits=c_bits, election=election))
     else:
-        step = jax.vmap(partial(_one_round, pmin=lambda x: x,
+        step = jax.vmap(partial(_one_round, pmin=lambda x, default=None: x,
                                 use_pallas=use_pallas))
 
     def cond(c):
@@ -806,20 +948,25 @@ def _solve_bucket(
         done_dev = jnp.zeros((B,), bool)
         rdone_dev = jnp.zeros((B,), jnp.int32)
 
+        overlap = (runtime.resolve_interval_pipeline(
+            params.interval_pipeline) == 1)
         interval = max(params.batch_check_frequency, 1)
         cap_rounds = max_rounds or (n_pad + 2)
         stats = BatchStats(buckets=1, bucket_shapes=((n_pad, cap, B),))
         history = []
-        box = dict(cur_cap=cap)
+        box = dict(cur_cap=cap, dispatched=0, inflight=[])
 
         fn = _build_batch_interval_fn(params.use_pallas, contract_bits,
                                       election)
 
         def dispatch(s):
             comp, mask, src_d, dst_d, key_d, slot_d, done, rdone = s
-            this_rounds = min(interval, cap_rounds - stats.rounds)
+            this_rounds = max(min(interval, cap_rounds - box["dispatched"]),
+                              0)
             state = fn(comp, mask, src_d, dst_d, key_d, slot_d, done, rdone,
                        this_rounds)
+            box["dispatched"] += this_rounds
+            box["inflight"].append(box["cur_cap"])   # popped by finish (FIFO)
             # The interval's scalar summary: the per-graph done vector is
             # already reduced on device, so the host reads ONE flag per
             # interval no matter how many graphs ride the bucket.
@@ -828,7 +975,7 @@ def _solve_bucket(
         def finish(s, vals):
             all_done, r, census = vals
             stats.rounds += int(r)
-            stats.edges_scanned += int(r) * box["cur_cap"] * B
+            stats.edges_scanned += int(r) * box["inflight"].pop(0) * B
             history.append(int(census))
             if bool(all_done):
                 return s, True
@@ -856,7 +1003,8 @@ def _solve_bucket(
             (comp_dev, mask_dev, src_d, dst_d, key_d, slot_d, done_dev,
              rdone_dev), dispatch, finish, stats=stats,
             max_intervals=cap_rounds,
-            fail_msg="batched Borůvka engine failed to converge")
+            fail_msg="batched Borůvka engine failed to converge",
+            overlap=overlap)
         mask_dev, rdone_dev = state[1], state[7]
 
         # The bucket's single final fetch: mask + per-graph round counts.

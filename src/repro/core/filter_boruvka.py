@@ -62,6 +62,7 @@ from repro.core.graph import PAD_VERTEX, Graph
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 from repro.kernels.spmv_minplus import ops as minplus_ops
+from repro.sharding import collectives
 
 MAX_PASSES = 2          # initial pass + the single recursion of DESIGN.md §10
 
@@ -90,18 +91,23 @@ def _thresholds(tree_keys: np.ndarray, num_levels: int) -> np.ndarray:
 
 @functools.lru_cache(maxsize=None)
 def _build_filter_fns(num_vertices: int, mesh: Optional[Mesh],
-                      use_pallas: bool):
+                      use_pallas: bool, collective: str = "pmin",
+                      cand_cap: Optional[int] = None):
     """Compiled (labels, probe) pair for one vertex count.
 
     ``labels`` builds the (K, n) per-level fragment labels from the padded
     tree arrays — one vmapped converged-connectivity launch, K lanes
-    sharing a single compiled while_loop.  ``probe`` evaluates the
-    quantized cycle rule for every candidate edge; under a mesh it runs as
-    an edge-sharded ``shard_map`` with the labels replicated.
+    sharing a single compiled while_loop.  Under a mesh it runs
+    tree-edge-sharded (labels replicated), and ``collective``/``cand_cap``
+    route its per-iteration hook-min through the compressed delta exchange
+    (DESIGN.md §11; cand_cap is pow2 so the cache stays log-bounded).
+    ``probe`` evaluates the quantized cycle rule for every candidate edge;
+    under a mesh it runs edge-sharded with the labels replicated.
     """
     n = num_vertices
+    num_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
 
-    def labels_fn(t_src, t_dst, t_key, thresholds):
+    def labels_fn(t_src, t_dst, t_key, thresholds, axis_name=None):
         # Levels are nested (T_1 ≤ … ≤ T_K), so level j warm-starts from
         # level j-1's labels: only newly-activated tree edges pay hook
         # iterations, and the whole stack costs little more than one
@@ -110,7 +116,9 @@ def _build_filter_fns(num_vertices: int, mesh: Optional[Mesh],
         for j in range(thresholds.shape[0]):
             comp = minplus_ops.connected_labels(
                 t_src, t_dst, t_key <= thresholds[j], num_vertices=n,
-                init=comp, use_pallas=use_pallas)
+                init=comp, use_pallas=use_pallas, axis_name=axis_name,
+                collective=collective, cand_cap=cand_cap,
+                num_shards=num_shards)
             rows.append(comp)
         return jnp.stack(rows)
 
@@ -126,6 +134,10 @@ def _build_filter_fns(num_vertices: int, mesh: Optional[Mesh],
         return jnp.where(sampled, tree, ~below)
 
     if mesh is not None:
+        labels_fn = compat.shard_map(
+            functools.partial(labels_fn, axis_name="x"), mesh,
+            in_specs=(P("x"), P("x"), P("x"), P()),
+            out_specs=P())
         probe_fn = compat.shard_map(
             probe_fn, mesh,
             in_specs=(P(), P(), P("x"), P("x"), P("x"), P("x"), P("x")),
@@ -150,10 +162,27 @@ def _run_filter(g: Graph, cand: np.ndarray, tree_pos: np.ndarray,
     tmask[tree_pos] = True
 
     thresholds = _thresholds(c_key[tree_pos], int(params.filter_levels))
-    t_cap = partition_lib.pow2ceil(max(tree_pos.size, 8))
+    # Tree arrays are sharded under a mesh: a pow2 per-shard block keeps
+    # every shard rectangular at any device count.
+    t_block = partition_lib.pow2ceil(
+        max(-(-max(tree_pos.size, 8) // num_shards), 1))
+    t_cap = t_block * num_shards
     t_src, t_dst = _pad_to((c_src[tree_pos], c_dst[tree_pos]), t_cap,
                            (PAD_VERTEX, PAD_VERTEX))
     (t_key,) = _pad_to((c_key[tree_pos],), t_cap, (keys_lib.INF_KEY,))
+
+    # Compressed hook-min exchange for the label loop (DESIGN.md §11):
+    # each local tree edge can hook at most one entry per iteration, so
+    # the per-shard block bounds the candidate count; engage only when the
+    # wire model beats the dense uint32 pmin.
+    n = g.num_vertices
+    collective = runtime.resolve_collective(params.collective)
+    cand_cap = None
+    if num_shards > 1 and collective == "compressed":
+        cap = max(partition_lib.pow2ceil(min(n, 2 * t_block)), 8)
+        if (collectives.compressed_bytes(cap, num_shards, 4)
+                < collectives.dense_bytes(n, num_shards, 4)):
+            cand_cap = cap
 
     # Probe shape: power-of-two multiple of the shard count, padded with
     # INF keys (pad lanes resolve to "drop", then fall off the [:size]
@@ -163,8 +192,9 @@ def _run_filter(g: Graph, cand: np.ndarray, tree_pos: np.ndarray,
     (p_key,) = _pad_to((c_key,), m_cap, (keys_lib.INF_KEY,))
     p_smp, p_tree = _pad_to((smask, tmask), m_cap, (False, False))
 
-    labels_fn, probe_fn = _build_filter_fns(g.num_vertices, mesh,
-                                            bool(params.use_pallas))
+    labels_fn, probe_fn = _build_filter_fns(
+        g.num_vertices, mesh, bool(params.use_pallas),
+        "compressed" if cand_cap is not None else "pmin", cand_cap)
     with enable_x64():
         labels = labels_fn(jnp.asarray(t_src), jnp.asarray(t_dst),
                            jnp.asarray(t_key), jnp.asarray(thresholds))

@@ -573,12 +573,16 @@ def _build_step_fn(topo: GHSTopology, params: GHSParams,
 def _build_interval_fn(topo: GHSTopology, params: GHSParams,
                        mesh: Optional[Mesh]):
     """Device-resident superstep loop: (state, step0, silent0, n_steps) ->
-    (state, [steps_run, silent_streak, err]).
+    (state, [abs_steps, silent_streak, err]).
 
     Runs up to ``n_steps`` supersteps in one ``lax.while_loop`` dispatch,
     breaking early on an error flag or once the consecutive-silent-check
     streak reaches ``empty_iter_cnt_to_break`` (paper §3.6) — the host
-    reads back one fused length-3 vector per interval."""
+    reads back one fused length-3 vector per interval.  The vector carries
+    the ABSOLUTE superstep count (``step0 + steps_run``) so the next
+    interval can be dispatched straight from the previous one's un-fetched
+    device outputs — the hand-off the double-buffered driver needs
+    (DESIGN.md §11)."""
     step_core = make_superstep(topo, params, _AXIS if mesh is not None
                                else None)
     check = max(params.check_frequency, 1)
@@ -600,7 +604,7 @@ def _build_interval_fn(topo: GHSTopology, params: GHSParams,
         st, i, silent, err = jax.lax.while_loop(
             cond, body,
             (st, jnp.int32(0), silent0.astype(jnp.int32), jnp.int32(0)))
-        return st, jnp.stack([i, silent, err])
+        return st, jnp.stack([step0.astype(jnp.int32) + i, silent, err])
 
     donate = runtime.donation(0)
     if mesh is None:
@@ -644,28 +648,44 @@ def _raise_on_err(err: int):
 
 
 def _device_driver(state, topo, params, mesh, stats, total_cap: int):
-    """Fused loop: ≤ 1 host sync per ``check_frequency`` supersteps."""
+    """Fused loop: ≤ 1 host sync per ``check_frequency`` supersteps.
+
+    The superstep / silent-streak counters ride the interval fn's device
+    scalar vector (absolute step counts), so the next interval is
+    dispatched straight from the previous one's un-fetched outputs — which
+    is what lets ``params.interval_pipeline`` double-buffer this driver
+    (DESIGN.md §11).  A silent state is a while-loop fixed point (the cond
+    fails immediately), so the speculative trailing interval cannot
+    perturb the forest; an errored interval's successor wastes bounded
+    device work whose results the raise discards."""
     fn = _build_interval_fn(topo, params, mesh)
     interval = max(params.check_frequency, 1)
     empty_needed = max(params.empty_iter_cnt_to_break, 1)
-    box = dict(steps=0, silent=0)
+    overlap = (runtime.resolve_interval_pipeline(params.interval_pipeline)
+               == 1)
+    box = dict(steps=0, dispatched=0)
 
-    def dispatch(st):
-        n_steps = min(interval, total_cap - box["steps"])
-        return fn(st, np.int32(box["steps"]), np.int32(box["silent"]),
-                  np.int32(n_steps))
+    def dispatch(s):
+        st, scal = s
+        # Clamp by the DISPATCHED total: under overlap this runs before
+        # the previous interval's readback is consumed.  A clamped-to-zero
+        # interval is a device no-op returning its inputs' counters.
+        n_steps = max(min(interval, total_cap - box["dispatched"]), 0)
+        box["dispatched"] += n_steps
+        st, scal = fn(st, scal[0], scal[1], np.int32(n_steps))
+        return (st, scal), scal
 
-    def finish(st, vals):
-        i, silent, err = (int(v) for v in np.asarray(vals))
+    def finish(s, vals):
+        steps_abs, silent, err = (int(v) for v in np.asarray(vals))
         _raise_on_err(err)
-        box["steps"] += i
-        box["silent"] = silent
-        return st, silent >= empty_needed
+        box["steps"] = steps_abs
+        return s, silent >= empty_needed
 
-    state = runtime.interval_loop(
-        state, dispatch, finish, stats=stats,
+    state, _ = runtime.interval_loop(
+        (state, jnp.zeros((3,), jnp.int32)), dispatch, finish, stats=stats,
         max_intervals=-(-total_cap // interval),
-        fail_msg=f"GHS engine did not reach silence in {total_cap} steps")
+        fail_msg=f"GHS engine did not reach silence in {total_cap} steps",
+        overlap=overlap)
     return state, box["steps"]
 
 

@@ -58,6 +58,30 @@ class GHSParams:
                                       #   interval, both engines)
                                       # 'host': legacy per-round / per-superstep
                                       #   host loop
+    collective: str = "pmin"          # cross-shard per-round reduction
+                                      # (DESIGN.md §11):
+                                      # 'pmin' — full-width lax.pmin over the
+                                      #   replicated (n,) arrays (seed
+                                      #   behavior)
+                                      # 'compressed' — delta exchange: each
+                                      #   shard ships only the entries it
+                                      #   improved this round as packed
+                                      #   (index, value) candidate lists on a
+                                      #   ppermute ring, with a bit-identity
+                                      #   lax.pmin fallback when a shard
+                                      #   overflows the static cap.  Forests
+                                      #   are bit-identical either way; bytes
+                                      #   shrink with the active edge count.
+    interval_pipeline: int = 1        # interval dispatch depth (DESIGN.md
+                                      # §11): 1 double-buffers the device
+                                      # round loops (interval k+1 is
+                                      # dispatched before interval k's fused
+                                      # scalar readback is consumed, hiding
+                                      # host-sync latency); 0 is the
+                                      # sequential dispatch→readback→decide
+                                      # loop.  Forests are byte-identical
+                                      # either way; legacy host loops are
+                                      # always sequential.
     round_kernel: str = "xla"         # Borůvka round body (DESIGN.md §9):
                                       # 'xla' — per-edge scatter/gather chain
                                       #   (_one_round, the seed behavior)

@@ -16,7 +16,11 @@ This module owns the pieces that are engine-independent:
   dispatch's scalar outputs) and one ``host_syncs``/``intervals`` ledger
   update, then hands the scalars to an engine-specific ``finish`` hook that
   interprets them (raise on error flags, count rounds/supersteps, trigger
-  compaction) and decides termination.
+  compaction) and decides termination.  With ``overlap=True`` (DESIGN.md
+  §11) the loop is double-buffered: interval k+1 is dispatched *before*
+  interval k's scalar readback is consumed, so the blocking transfer hides
+  behind in-flight device work — see the function docstring for the
+  contract a pipelined engine must satisfy.
 * :class:`EngineStats` — the unified stats protocol: every engine's stats
   object derives from it so benchmarks can meter host syncs and interval
   counts uniformly.
@@ -51,6 +55,7 @@ from repro.core.kruskal_ref import ForestResult
 
 ROUND_LOOPS = ("device", "host")
 ROUND_KERNELS = ("xla", "pallas")
+INTERVAL_PIPELINES = (0, 1)
 
 
 @dataclasses.dataclass
@@ -72,6 +77,17 @@ class EngineStats:
     sampling hybrid (DESIGN.md §10): edges proven non-MSF by the cycle-rule
     connectivity probe and the number of sample→solve→filter passes run.
     Engines without a filter stage leave them 0.
+
+    Overlap-aware accounting (DESIGN.md §11): ``host_syncs`` and
+    ``intervals`` always count CONSUMED readbacks/dispatches, so the
+    ``host_syncs == intervals + 1`` contract is pipeline-invariant.
+    ``overlapped_syncs`` counts the readbacks that were consumed while a
+    successor interval was already in flight (0 on a sequential loop);
+    ``speculative_intervals`` counts trailing dispatches whose scalars were
+    never fetched because termination had already been observed (their
+    device work is a provable no-op — see interval_loop).  ``comm_bytes``
+    is the per-shard on-wire byte total of the engine's cross-shard
+    reductions under the selected ``params.collective`` (0 off-mesh).
     """
 
     host_syncs: int = 0
@@ -79,6 +95,9 @@ class EngineStats:
     rounds_per_graph: tuple = ()
     edges_filtered: int = 0
     filter_passes: int = 0
+    overlapped_syncs: int = 0
+    speculative_intervals: int = 0
+    comm_bytes: int = 0
 
 
 def donation(*argnums: int) -> Tuple[int, ...]:
@@ -95,6 +114,7 @@ def interval_loop(
     stats: EngineStats,
     max_intervals: int,
     fail_msg: str,
+    overlap: bool = False,
 ) -> Any:
     """Drive a device-resident engine to completion.
 
@@ -111,17 +131,51 @@ def interval_loop(
     the summary — the driver still performs exactly one readback per
     interval regardless of batch size (DESIGN.md §8).
 
+    ``overlap=True`` double-buffers the loop (DESIGN.md §11): interval
+    k+1 is dispatched from interval k's device state BEFORE k's scalar
+    readback is consumed, so the blocking transfer overlaps in-flight
+    device work instead of draining the pipeline.  ``finish`` then runs
+    one interval "late": it receives interval k's scalars but the state
+    AFTER interval k+1.  A pipelined engine must therefore guarantee
+    (1) an interval dispatched from a terminated state is a device no-op
+    (state fixed point), so the speculative trailing interval cannot
+    perturb the result, and (2) any state surgery ``finish`` performs from
+    k's scalars (compaction caps, collective caps) stays correct against
+    state k+1 — monotone-shrinking censuses give this for free.  Engines
+    whose ``finish`` consumes per-interval state it would otherwise lose
+    (the legacy host loops' winner bitmaps) must stay sequential.
+
     Raises ``RuntimeError(fail_msg)`` if ``max_intervals`` elapse without
     ``finish`` signalling done.
     """
+    if not overlap:
+        for _ in range(max_intervals):
+            state, scalars = dispatch(state)
+            vals = jax.device_get(scalars)  # the interval's single host sync
+            stats.host_syncs += 1
+            stats.intervals += 1
+            state, done = finish(state, vals)
+            if done:
+                return state
+        raise RuntimeError(fail_msg)
+
+    # One-interval-deep pipeline: `pending` is interval k's un-consumed
+    # scalar summary while `state` already holds interval k's output.
+    state, pending = dispatch(state)
     for _ in range(max_intervals):
-        state, scalars = dispatch(state)
-        vals = jax.device_get(scalars)  # the interval's single host sync
+        state, scalars = dispatch(state)     # interval k+1, speculative
+        vals = jax.device_get(pending)       # interval k's single host sync
         stats.host_syncs += 1
         stats.intervals += 1
+        stats.overlapped_syncs += 1
         state, done = finish(state, vals)
         if done:
+            # Interval k terminated, so the in-flight k+1 ran on a fixed
+            # point: its state is byte-identical and its scalars are never
+            # fetched — no extra host sync.
+            stats.speculative_intervals += 1
             return state
+        pending = scalars
     raise RuntimeError(fail_msg)
 
 
@@ -171,6 +225,24 @@ def resolve_round_kernel(round_kernel: str) -> str:
         raise ValueError(
             f"unknown round_kernel {round_kernel!r}; options: {ROUND_KERNELS}")
     return round_kernel
+
+
+def resolve_collective(collective: str) -> str:
+    """Validate the ``params.collective`` knob (DESIGN.md §11): ``"pmin"``
+    full-width reductions / ``"compressed"`` delta-exchange candidate
+    lists (:func:`repro.sharding.collectives.pmin_compressed`)."""
+    from repro.sharding import collectives
+    return collectives.resolve_collective(collective)
+
+
+def resolve_interval_pipeline(depth: int) -> int:
+    """Validate the ``params.interval_pipeline`` knob: 0 = sequential
+    dispatch→readback→decide, 1 = double-buffered intervals."""
+    if depth not in INTERVAL_PIPELINES:
+        raise ValueError(
+            f"interval_pipeline must be one of {INTERVAL_PIPELINES}, "
+            f"got {depth!r}")
+    return depth
 
 
 # ---------------------------------------------------------------------------

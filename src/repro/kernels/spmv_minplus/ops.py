@@ -144,13 +144,16 @@ def elect(
     return ref.elect(cs, cd, key, num_segments=num_segments)
 
 
-@functools.partial(jax.jit, static_argnames=("num_vertices", "axis_name",
-                                             "use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "num_vertices", "axis_name", "use_pallas", "interpret",
+    "collective", "cand_cap", "num_shards"))
 def connected_labels(
     src: jnp.ndarray, dst: jnp.ndarray, active: jnp.ndarray, *,
     num_vertices: int, init: "jnp.ndarray | None" = None,
     axis_name: "str | None" = None,
     use_pallas: bool = False, interpret: bool = True,
+    collective: str = "pmin", cand_cap: "int | None" = None,
+    num_shards: int = 1,
 ) -> jnp.ndarray:
     """Converged connected-component labels over the active edge set.
 
@@ -173,6 +176,13 @@ def connected_labels(
     contributions (pmin) and the per-shard liveness flag (pmax) — the
     labels are then replicated and identical on every shard.  The body is
     also vmappable (batched probes share one compiled loop).
+
+    ``collective="compressed"`` with a static ``cand_cap`` routes the
+    hook-min through the delta exchange of
+    :func:`repro.sharding.collectives.pmin_compressed` (DESIGN.md §11):
+    ``hook_min`` returns the identity wherever a shard hooked nothing, so
+    the identity parent array is the exchange's baseline and only actual
+    hook requests travel the ring.  Exact min ⇒ labels stay bit-identical.
     """
     n = num_vertices
     src = jnp.clip(src, 0, n - 1)
@@ -196,7 +206,14 @@ def connected_labels(
         lo = jnp.minimum(cs, cd)
         parent = union_find.hook_min(n, hi, lo, alive)
         if axis_name is not None:
-            parent = jax.lax.pmin(parent, axis_name)
+            if collective == "compressed" and cand_cap is not None:
+                from repro.sharding import collectives
+                parent = collectives.pmin_compressed(
+                    parent, axis_name,
+                    default=jnp.arange(n, dtype=parent.dtype),
+                    cap=cand_cap, num_shards=num_shards)
+            else:
+                parent = jax.lax.pmin(parent, axis_name)
         comp = shortcut_relabel(parent.astype(jnp.int32), comp,
                                 use_pallas=use_pallas, interpret=interpret)
         _, _, alive2 = crossing(comp)

@@ -6,7 +6,9 @@ platform, device count, or x64 mode produces numbers that cannot be
 compared across runs.  This module is the one home for that pinning:
 
 * :func:`set_platform` — force the jax platform (``cpu``/``gpu``/``tpu``),
-  plus the allocator flags a GPU run wants pinned.
+  plus the allocator flags a GPU run wants pinned and the platform's
+  latency-hiding / async-collective flags (:func:`latency_hiding_flags`),
+  so accelerator bench legs get compute/collective overlap for free.
 * :func:`force_host_device_count` — emulate an N-device host (the
   ``--xla_force_host_platform_device_count`` flag the multi-shard tests
   and sweeps rely on).
@@ -48,11 +50,23 @@ def _append_xla_flags(flag: str) -> None:
     os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()
 
 
+def latency_hiding_flags(platform: str = "tpu") -> str:
+    """XLA latency-hiding / async-collective flags for ``platform``
+    (re-exported from :mod:`repro.sharding.collectives` so bench legs can
+    pin overlap without importing the sharding layer)."""
+    from repro.sharding import collectives
+    return collectives.latency_hiding_flags(platform)
+
+
 def set_platform(platform: str = "cpu") -> None:
-    """Force the jax platform; pins GPU allocator flags alongside."""
+    """Force the jax platform; pins allocator + latency-hiding flags
+    alongside (accelerator legs get compute/collective overlap for free —
+    the CPU container has no such flags and skips)."""
     if platform not in ("cpu", "gpu", "tpu"):
         raise ValueError(f"unknown platform {platform!r}")
     _require_uninitialized("platform")
+    for flag in latency_hiding_flags(platform).split():
+        _append_xla_flags(flag)
     import jax
     jax.config.update("jax_platform_name", platform)
     if platform == "gpu":

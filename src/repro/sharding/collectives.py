@@ -1,17 +1,125 @@
-"""Distributed-optimization helpers: compressed gradients + overlap flags.
+"""Sharded collectives: compressed MST reductions + LM-gradient helpers.
 
-``compress_tree`` casts gradients to bf16 with error feedback *before* the
-data-parallel reduction XLA inserts (halving DP all-reduce bytes); the
-residual rides in the optimizer state so the update is unbiased over time.
+Two families live here:
+
+**MST-facing compressed reductions** (DESIGN.md §11).  The per-round
+exchange of the distributed Borůvka engines is an elementwise ``pmin``
+over a replicated length-``n`` array (fragment MOE keys, hook parents) —
+but each shard only *improves* the entries its local edges touch, and that
+count shrinks geometrically as fragments merge and edges die.
+:func:`pmin_compressed` exploits the sparsity: each shard packs its
+improved ``(index, value)`` pairs into a static-``cap`` candidate list and
+the lists travel a ``ppermute`` store-and-forward ring (P-1 steps, every
+shard scatter-mins every other shard's original packet exactly once).
+The reduction is an exact min over the identical value set, so the result
+is bit-identical to ``lax.pmin`` by construction; when any shard's
+candidate count overflows ``cap``, a replicated flag routes the WHOLE
+step through ``lax.pmin`` (the fallback contract — never a truncated
+exchange).  This mirrors the paper's message-compression optimization:
+the exchange is sized by what changed, not by the vertex count.
+
+**LM-gradient helpers** (the module's original residents).
+``compress_tree`` casts gradients to bf16 with error feedback *before*
+the data-parallel reduction XLA inserts (halving DP all-reduce bytes);
+the residual rides in the optimizer state so the update is unbiased over
+time.
 
 ``latency_hiding_flags`` returns the XLA flags that enable the
-latency-hiding scheduler (compute/collective overlap) on real TPU runs;
-the launcher exports them, the CPU container ignores them.
+latency-hiding scheduler (compute/collective overlap) for TPU *and* GPU
+runs; :func:`repro.platform.set_platform` exports them, the CPU container
+ignores them.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+COLLECTIVES = ("pmin", "compressed")
+
+# Wire format of one candidate entry: int32 index lane + the value lane.
+INDEX_BYTES = 4
+
+
+def resolve_collective(collective: str) -> str:
+    """Validate the shared ``params.collective`` knob."""
+    if collective not in COLLECTIVES:
+        raise ValueError(
+            f"unknown collective {collective!r}; options: {COLLECTIVES}")
+    return collective
+
+
+def pmin_compressed(
+    x: jnp.ndarray,
+    axis_name: str,
+    *,
+    default: jnp.ndarray,
+    cap: int,
+    num_shards: int,
+) -> jnp.ndarray:
+    """Elementwise min over ``axis_name``, exchanging only improved entries.
+
+    ``x`` is a per-shard length-``n`` array whose entries equal ``default``
+    (a scalar sentinel like ``INF_KEY``, or an elementwise baseline like
+    the identity parent array — any shape broadcastable against ``x``)
+    wherever the shard contributed nothing this round.  Each shard packs
+    the positions where ``x != default`` into a ``(cap,)`` candidate list
+    of ``(int32 index, value)`` pairs; the packets ride a store-and-forward
+    ``ppermute`` ring for ``num_shards - 1`` steps, so every shard
+    scatter-mins every other shard's *original* packet exactly once.
+
+    Exactness: the result at index ``i`` is the min over all shards'
+    contributed values and the (shard-agreed) baseline — the same value
+    set ``lax.pmin`` reduces, in a different order, and min over uint keys
+    is order-free, so the output is bit-identical.  If ANY shard holds
+    more than ``cap`` candidates, a pmax-replicated overflow flag sends
+    every shard through plain ``lax.pmin`` for this call (the fallback
+    contract); ``cap`` therefore tunes bytes, never correctness.
+    """
+    if num_shards <= 1:
+        return x
+    n = x.shape[0]
+    has = x != default
+    count = has.sum(dtype=jnp.int32)
+    overflow = jax.lax.pmax((count > cap).astype(jnp.int32), axis_name) > 0
+
+    def full(x):
+        return jax.lax.pmin(x, axis_name)
+
+    def ring(x):
+        pos = jnp.cumsum(has.astype(jnp.int32)) - 1
+        idx = jnp.where(has, pos, cap)          # cap → scatter-dropped
+        # Index sentinel n is out of range for the accumulator scatter, so
+        # unused packet slots are inert on the receiving side too.
+        frag = jnp.full((cap,), n, jnp.int32).at[idx].set(
+            jnp.arange(n, dtype=jnp.int32), mode="drop")
+        val = jnp.zeros((cap,), x.dtype).at[idx].set(x, mode="drop")
+        acc = x
+        perm = [(i, (i + 1) % num_shards) for i in range(num_shards)]
+        for _ in range(num_shards - 1):
+            frag = jax.lax.ppermute(frag, axis_name, perm)
+            val = jax.lax.ppermute(val, axis_name, perm)
+            acc = acc.at[frag].min(val, mode="drop")
+        return acc
+
+    return jax.lax.cond(overflow, full, ring, x)
+
+
+def compressed_bytes(cap: int, num_shards: int, value_bytes: int) -> int:
+    """Per-shard on-wire bytes of ONE compressed exchange: ``num_shards-1``
+    ring steps each forwarding a ``cap``-entry packet."""
+    if num_shards <= 1:
+        return 0
+    return (num_shards - 1) * cap * (INDEX_BYTES + value_bytes)
+
+
+def dense_bytes(n: int, num_shards: int, value_bytes: int) -> int:
+    """Per-shard on-wire bytes of one full-width ``lax.pmin`` over a
+    replicated length-``n`` array, under the bandwidth-optimal
+    reduce-scatter + all-gather model: ``2·(P-1)/P · n`` values."""
+    if num_shards <= 1:
+        return 0
+    return int(2 * (num_shards - 1) * n * value_bytes // num_shards)
 
 
 def compress_tree(grads, residual):
@@ -33,13 +141,36 @@ def compress_tree(grads, residual):
     return comp_g, new_res
 
 
-LATENCY_HIDING_FLAGS = (
+LATENCY_HIDING_FLAGS_TPU = (
     "--xla_tpu_enable_latency_hiding_scheduler=true "
     "--xla_tpu_enable_async_collective_fusion=true "
     "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
     "--xla_tpu_overlap_compute_collective_tc=true "
 )
 
+LATENCY_HIDING_FLAGS_GPU = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true "
+    "--xla_gpu_enable_pipelined_all_reduce=true "
+    "--xla_gpu_enable_pipelined_all_gather=true "
+    "--xla_gpu_enable_pipelined_reduce_scatter=true "
+    "--xla_gpu_enable_while_loop_double_buffering=true "
+)
 
-def latency_hiding_flags() -> str:
-    return LATENCY_HIDING_FLAGS
+
+def latency_hiding_flags(platform: str = "tpu") -> str:
+    """XLA latency-hiding / async-collective flags for ``platform``.
+
+    ``"tpu"`` enables the latency-hiding scheduler + async collective
+    fusion; ``"gpu"`` the GPU scheduler, prioritized async streams, and
+    pipelined collectives (plus while-loop double buffering, which pairs
+    with the runtime's double-buffered intervals — DESIGN.md §11).
+    ``"cpu"`` has no such flags and returns the empty string.
+    """
+    if platform == "tpu":
+        return LATENCY_HIDING_FLAGS_TPU
+    if platform == "gpu":
+        return LATENCY_HIDING_FLAGS_GPU
+    if platform == "cpu":
+        return ""
+    raise ValueError(f"unknown platform {platform!r}")

@@ -1,0 +1,153 @@
+"""Continuous-batching serving benchmark: latency SLOs under Poisson load.
+
+Drives the MST service (DESIGN.md §12, ``repro.launch.serve``) with an
+open-loop Poisson arrival process at several offered loads.  Per load the
+bench reports p50/p99 latency, achieved graphs/s, the shed rate (typed
+backpressure: oversized graphs at admission, queue-full under overload),
+and the flush-trigger mix (size vs deadline) — the "millions of users"
+story of ROADMAP made measurable.
+
+Every served forest is verified edge-set-exact against the Kruskal oracle
+AND bit-identical to its single-graph engine solve, per run.  The bucket
+lattice is warmed once up front (compiled executables live in the
+process-global jit cache, so per-load services start hot — the measured
+latencies are steady-state, not compile time).  Emits
+``BENCH_serving.json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_serving.py
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke   # CI leg
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from common import pin_backend
+
+
+def build_graphs(requests: int, max_vertices: int, seed: int):
+    """Mixed-size rmat request stream.  Degree 8 keeps every scale inside
+    the edge capacity; every 16th graph runs full degree 32 so the
+    oversize-shed path sees real traffic."""
+    import numpy as np
+
+    from repro.core import generators
+    rng = np.random.default_rng(seed)
+    scale_top = max(max_vertices.bit_length() - 1, 3)
+    return [
+        generators.generate(
+            "rmat", int(rng.integers(3, scale_top + 1)),
+            avg_degree=8 if i % 16 else 32,
+            seed=int(rng.integers(0, 2**31)))
+        for i in range(requests)
+    ]
+
+
+def run_load(params, graphs, rate: float, seed: int, max_rounds=None):
+    import numpy as np
+
+    from repro.core import kruskal_ref
+    from repro.core.mst_api import minimum_spanning_forest
+    from repro.launch.serve import MSTService, run_poisson
+
+    service = MSTService(params, max_rounds=max_rounds)
+    futures = run_poisson(service, graphs, rate=rate, seed=seed)
+
+    oracle_exact = bit_identical = True
+    for g, f in zip(graphs, futures):
+        if f is None:
+            continue
+        res = f.result()
+        want = kruskal_ref.kruskal(g)
+        if not (np.array_equal(res.edge_mask, want.edge_mask)
+                and res.num_components == want.num_components):
+            oracle_exact = False
+        single, _ = minimum_spanning_forest(g, params=params)
+        if not np.array_equal(res.edge_mask, single.edge_mask):
+            bit_identical = False
+
+    s = service.stats
+    return dict(
+        rate=rate,
+        offered=len(graphs),
+        oracle_exact=oracle_exact,
+        bit_identical=bit_identical,
+        **s.summary(),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests, smaller graphs")
+    ap.add_argument("--rates", default="5,15,40",
+                    help="comma-separated offered loads, graphs/second")
+    ap.add_argument("--requests", type=int, default=160)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--max-vertices", type=int, default=256)
+    ap.add_argument("--max-edges", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.rates = "10,25,50"
+        args.requests = 48
+        args.max_vertices = 32
+        args.max_edges = 128
+
+    pin_backend("cpu")
+    from repro.core.params import GHSParams
+    from repro.launch.serve import MSTService
+
+    rates = [float(r) for r in args.rates.split(",")]
+    assert len(rates) >= 3, "report at least three offered loads"
+    params = GHSParams(
+        serve_lanes=args.lanes,
+        serve_max_wait_ms=args.max_wait_ms,
+        serve_max_queue=args.max_queue,
+        batch_max_vertices=args.max_vertices,
+        batch_max_edges=args.max_edges)
+
+    t0 = time.perf_counter()
+    warmed = MSTService(params).warmup()
+    t_warm = time.perf_counter() - t0
+    print(f"warmup: {warmed} bucket shapes in {t_warm:.1f}s")
+
+    graphs = build_graphs(args.requests, args.max_vertices, args.seed)
+    rows = []
+    for rate in rates:
+        row = run_load(params, graphs, rate, args.seed)
+        rows.append(row)
+        print(f"rate {rate:>6.1f}/s: p50 {row['p50_ms']:8.1f} ms  "
+              f"p99 {row['p99_ms']:8.1f} ms  "
+              f"{row['graphs_per_s']:6.1f} graphs/s  "
+              f"shed {row['shed_rate']:.1%}")
+
+    rec = dict(
+        config=dict(
+            rates=rates, requests=args.requests, lanes=args.lanes,
+            max_wait_ms=args.max_wait_ms, max_queue=args.max_queue,
+            max_vertices=args.max_vertices, max_edges=args.max_edges,
+            seed=args.seed, smoke=bool(args.smoke),
+            params=dataclasses.asdict(params)),
+        warmup=dict(buckets=warmed, seconds=round(t_warm, 2)),
+        rows=rows,
+        all_oracle_exact=all(r["oracle_exact"] for r in rows),
+        all_bit_identical=all(r["bit_identical"] for r in rows),
+    )
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"wrote {args.out}")
+    assert rec["all_oracle_exact"], "a served forest diverged from Kruskal"
+    assert rec["all_bit_identical"], \
+        "a served forest diverged from its single-graph solve"
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,7 @@
 """
 import argparse
 
-from repro.launch import serve as serve_driver
+from repro.launch import serve_lm as serve_driver
 
 
 def main():

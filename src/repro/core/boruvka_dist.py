@@ -533,6 +533,7 @@ def _device_engine(
         interval = max(params.check_frequency, 1)
         cap_rounds = max_rounds or (n + 2)
         stats = BoruvkaStats()
+        stats.edge_staging = bundle.staging
         history = []
         comm_hist = []
         # Value lanes of the per-round reductions, for the §11 wire model:
@@ -627,7 +628,8 @@ def _device_engine(
             overlap=overlap)[:2]
 
         comp_final, mask_full = jax.device_get((comp_dev, mask_dev))
-        stats.host_syncs += 1
+        stats.host_syncs += 1          # final state fetch
+        stats.extra_syncs += 1
 
     comp_final = np.asarray(comp_final)
     if fused:
@@ -667,6 +669,7 @@ class BatchStats(BoruvkaStats):
         fallback run) — the ONE place the shared counters are summed."""
         self.host_syncs += st.host_syncs
         self.intervals += st.intervals
+        self.extra_syncs += st.extra_syncs
         self.rounds += st.rounds
         self.compactions += st.compactions
         self.edges_scanned += st.edges_scanned
@@ -897,6 +900,80 @@ def _build_batch_compact_fn(cap: int) -> Callable:
     return jax.jit(jax.vmap(partial(_compact_shard, cap=cap)))
 
 
+def warm_bucket(
+    batch_size: int,
+    n_pad: int,
+    cap: int,
+    params: GHSParams = DEFAULT_PARAMS,
+) -> int:
+    """Precompile EVERY executable a ``(batch_size, n_pad, cap)`` bucket
+    can touch during a solve (DESIGN.md §12 warmup): the vmapped interval
+    fn at the load cap AND at every pow2 compaction cap below it, plus the
+    shrink slices between those caps.
+
+    Solving an all-ghost flush only compiles the load-cap trace — ghost
+    lanes converge before ever compacting, so without this the FIRST real
+    flush of a shape pays the post-shrink retraces mid-request, exactly
+    the latency spike warmup exists to prevent.  The interval fn's cache
+    key carries the ORIGINAL bucket's contraction bits, so the sub-cap
+    traces here are distinct from (not covered by) warming smaller
+    buckets.  Mirrors ``_solve_bucket``'s static-key computation on an
+    empty batch: the contraction gate and election lowering are
+    data-independent for (0, 1)-weight traffic.  Only the contracted
+    front-packed shrink path is warmed (the plain per-lane compact path
+    runs only when the bit-gate fails, which pipeline weights never
+    trigger).  Returns the number of executables compiled."""
+    B = int(batch_size)
+    s_bits = max(n_pad - 1, 1).bit_length()
+    c_bits = max(cap - 1, 1).bit_length()
+    contract_bits = ((s_bits, c_bits)
+                     if params.compaction == "pow2"
+                     and 2 * s_bits + 30 + c_bits <= 64 else None)
+    election = "scatter"
+    if (runtime.resolve_round_kernel(params.round_kernel) == "pallas"
+            and contract_bits is not None):
+        election = "sort"
+    fn = _build_batch_interval_fn(params.use_pallas, contract_bits,
+                                  election)
+
+    # The load cap itself plus every pow2 compaction target below it
+    # (``finish`` only ever shrinks to ``max(pow2ceil(census), 8)``).
+    caps = [cap]
+    c = 8
+    while c * 2 < cap:
+        c *= 2
+    while c >= 8 and c < cap:
+        caps.append(c)
+        c //= 2
+    compiled = 0
+    with enable_x64():
+        for cur in caps:
+            # Fresh state every iteration: the interval fn donates all
+            # eight state buffers, so nothing it consumed may be reused.
+            comp = jnp.asarray(
+                np.broadcast_to(np.arange(n_pad, dtype=np.uint32),
+                                (B, n_pad)).copy())
+            mask = jnp.zeros((B, cap), bool)
+            done = jnp.zeros((B,), bool)
+            rdone = jnp.zeros((B,), jnp.int32)
+            src = jnp.full((B, cur), PAD_VERTEX, jnp.int32)
+            dst = jnp.full((B, cur), PAD_VERTEX, jnp.int32)
+            key = jnp.full((B, cur), INF_KEY, jnp.uint64)
+            slot = jnp.asarray(partition_lib.batched_slots(B, cur))
+            state = fn(comp, mask, src, dst, key, slot, done, rdone, 1)
+            jax.block_until_ready(state)
+            compiled += 1
+            _, _, src_o, dst_o, key_o, slot_o, _, _ = state[:8]
+            for new in caps:
+                if new >= cur:
+                    continue
+                out = _build_batch_shrink_fn(new)(
+                    src_o, dst_o, key_o, slot_o)
+                jax.block_until_ready(out)
+                compiled += 1
+    return compiled
+
+
 def _contract_gate(batch) -> Optional[Tuple[int, int]]:
     """(s_bits, c_bits) when the bucket's contraction quadruple fits one
     uint64 — fragment labels need ``log2(n_pad)`` bits each, weight bits 30
@@ -1009,12 +1086,39 @@ def _solve_bucket(
 
         # The bucket's single final fetch: mask + per-graph round counts.
         mask_h, rdone_h = jax.device_get((mask_dev, rdone_dev))
-        stats.host_syncs += 1
+        stats.host_syncs += 1          # the bucket's final fetch
+        stats.extra_syncs += 1
 
     results = batch.unpack(mask_h)
     stats.active_history = tuple(history)
     stats.rounds_per_graph = tuple(int(x) for x in np.asarray(rdone_h))
     return results, stats
+
+
+def solve_packed(
+    batch,                       # pipeline.GraphBatch
+    params: GHSParams = DEFAULT_PARAMS,
+    max_rounds: Optional[int] = None,
+) -> tuple[list[ForestResult], BatchStats]:
+    """Solve ONE pre-packed shape bucket (DESIGN.md §12).
+
+    The incremental counterpart of :func:`minimum_spanning_forests`: a
+    serving loop that routed requests through
+    :func:`repro.core.pipeline.bucket_shape` and packed a queue with
+    :func:`repro.core.pipeline.pack_bucket` dispatches the bucket here
+    without re-listing (or re-bucketing) the batch.  Results come back in
+    lane order; each forest is bit-identical to the single-graph solve.
+    Device loop only — the host fallback has no packed form.
+    """
+    if runtime.resolve_round_loop(params.round_loop) != "device":
+        raise ValueError(
+            "solve_packed requires round_loop='device'; the host loop "
+            "solves graphs one at a time via minimum_spanning_forest")
+    for r, g in enumerate(batch.graphs):
+        if np.any(g.weight.view(np.uint32) == INF32):
+            raise ValueError(
+                f"lane {r}: weights collide with the INF sentinel")
+    return _solve_bucket(batch, params, max_rounds)
 
 
 def minimum_spanning_forests(
@@ -1205,6 +1309,7 @@ def _host_engine(
     def put_edges(arrs):
         arrs = _pad_pow2(arrs, chunk, [PAD_VERTEX, PAD_VERTEX, INF32, INF32])
         stats.host_syncs += 1          # host→device re-upload
+        stats.extra_syncs += 1
         if edge_sharding is not None:
             return [jax.device_put(a, edge_sharding) for a in arrs]
         return [jnp.asarray(a) for a in arrs]
@@ -1240,6 +1345,7 @@ def _host_engine(
         if bool(done_v):
             return s, True
         stats.host_syncs += 1          # device→host: winner bitmap + ids
+        stats.extra_syncs += 1
         w = np.asarray(winners)
         if w.any():
             eids = np.asarray(eid_d)[w]
@@ -1250,6 +1356,7 @@ def _host_engine(
             and (rnd + 1) % max(params.check_frequency, 1) == 0
         ):
             stats.host_syncs += 1      # device→host: fragment labels
+            stats.extra_syncs += 1
             comp_h = np.asarray(comp_dev)
             active = box["active"]
             keep = comp_h[src[active]] != comp_h[dst[active]]

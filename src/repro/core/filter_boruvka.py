@@ -253,6 +253,8 @@ def minimum_spanning_forest(
 
         if tree_pos.size:
             keep = _run_filter(g, cand, tree_pos, smask, params, mesh)
+            stats.host_syncs += 1      # keep-mask fetch inside _run_filter
+            stats.extra_syncs += 1
         else:
             # Empty (or forest-free) sample: nothing is provably non-MSF,
             # so the final solve sees the full candidate set — the

@@ -762,7 +762,8 @@ def minimum_spanning_forest(
 
     # Final state fetch: forest + counters + histories, one transfer.
     state_h = jax.device_get(state)
-    stats.host_syncs += 1
+    stats.host_syncs += 1          # final state fetch
+    stats.extra_syncs += 1
 
     # Extract branch edges (union over shards & directions).
     se = np.asarray(state_h.se)

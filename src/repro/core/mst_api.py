@@ -101,3 +101,32 @@ def minimum_spanning_forests(
             f"minimum_spanning_forest")
     return boruvka_dist.minimum_spanning_forests(
         graphs, params=params, max_rounds=max_rounds)
+
+
+def solve_packed(
+    batch,
+    params: GHSParams = DEFAULT_PARAMS,
+    max_rounds=None,
+) -> tuple[list, runtime.EngineStats]:
+    """Solve one pre-packed :class:`repro.core.pipeline.GraphBatch`.
+
+    The incremental serving entry (DESIGN.md §12): the continuous-batching
+    loop in :mod:`repro.launch.serve` admits requests per-bucket via
+    :func:`repro.core.pipeline.bucket_shape`, packs a flushed queue with
+    :func:`repro.core.pipeline.pack_bucket`, and dispatches it here — one
+    vmapped device solve per flush, results in lane order, each forest
+    bit-identical to the single-graph solve.
+    """
+    return boruvka_dist.solve_packed(
+        batch, params=params, max_rounds=max_rounds)
+
+
+def warm_bucket(
+    batch_size: int,
+    n_pad: int,
+    cap: int,
+    params: GHSParams = DEFAULT_PARAMS,
+) -> int:
+    """Precompile every executable a bucket shape can touch during a solve
+    (serving warmup — see :func:`repro.core.boruvka_dist.warm_bucket`)."""
+    return boruvka_dist.warm_bucket(batch_size, n_pad, cap, params=params)

@@ -130,6 +130,21 @@ class GHSParams:
                                       # single recursion (a second
                                       # sample→solve→filter pass over the
                                       # survivors).  0 = auto: 4·num_vertices.
+    # Serving knobs (DESIGN.md §12) — launch/serve.py continuous batching.
+    serve_lanes: int = 8              # dispatch batch size: a bucket queue
+                                      # flushes when it holds this many
+                                      # graphs (or its deadline expires);
+                                      # flushes always pad to EXACTLY this
+                                      # many lanes with ghost graphs so one
+                                      # warmed executable per bucket shape
+                                      # serves every flush
+    serve_max_wait_ms: float = 50.0   # deadline: the oldest queued request
+                                      # waits at most this long before its
+                                      # bucket is flushed part-full
+    serve_max_queue: int = 64         # per-bucket admission bound; submits
+                                      # beyond it are shed with
+                                      # QueueFullError (backpressure, never
+                                      # silent drops)
 
 
 DEFAULT_PARAMS = GHSParams()

@@ -410,11 +410,94 @@ class GraphBatch:
 
 
 def _bucket_shape(n: int, m: int, bucket: str) -> Tuple[int, int]:
-    """Padded (n_pad, cap) for one graph under a bucketing policy."""
+    """Padded (n_pad, cap) for one graph under a bucketing policy.
+
+    Degenerate shapes are well-defined: an edgeless graph gets ``cap=1``
+    under ``"exact"`` (one all-sentinel lane slot) but ``cap=8`` under
+    ``"pow2"`` (the shared-executable floor) — both lanes solve and unpack
+    to an empty forest; see the degenerate-corpus tests."""
     from repro.core.partition import pow2ceil
     if bucket == "pow2":
         return pow2ceil(max(n, 1)), pow2ceil(max(m, 8))
     return max(n, 1), max(m, 1)
+
+
+def bucket_shape(
+    num_vertices: int,
+    num_edges: int,
+    *,
+    bucket: str = "pow2",
+    max_vertices: Optional[int] = None,
+    max_edges: Optional[int] = None,
+) -> Tuple[int, int]:
+    """Admission key for one graph: the padded ``(n_pad, cap)`` it would be
+    packed under by :func:`pack_batch`.
+
+    This is the incremental half of the batching contract — a serving loop
+    calls it per request to route the graph into a per-shape queue without
+    re-listing (or re-bucketing) everything already queued, then hands each
+    queue to :func:`pack_bucket` at flush time.  Raises the same
+    ``ValueError``s as :func:`pack_batch` for an unknown policy or a graph
+    exceeding ``max_vertices`` / ``max_edges`` (the backpressure signal).
+    """
+    if bucket not in BATCH_BUCKETS:
+        raise ValueError(
+            f"unknown batch bucket policy {bucket!r}; options: "
+            f"{BATCH_BUCKETS}")
+    n, m = int(num_vertices), int(num_edges)
+    if max_vertices is not None and n > max_vertices:
+        raise ValueError(
+            f"graph exceeds pack_batch capacity: num_vertices={n} "
+            f"> max_vertices={max_vertices}")
+    if max_edges is not None and m > max_edges:
+        raise ValueError(
+            f"graph exceeds pack_batch capacity: num_edges={m} "
+            f"> max_edges={max_edges}")
+    return _bucket_shape(n, m, bucket)
+
+
+def pack_bucket(graphs, n_pad: int, cap: int, *,
+                indices: Optional[tuple] = None) -> GraphBatch:
+    """Pack an already-admitted queue of same-bucket graphs into one
+    :class:`GraphBatch` — the flush half of incremental admission.
+
+    Every graph must satisfy ``num_vertices <= n_pad`` and
+    ``num_edges <= cap`` (i.e. have been routed here by
+    :func:`bucket_shape`); violations raise ``ValueError``.  ``indices``
+    optionally records the caller's request ordering (defaults to
+    ``0..B-1``)."""
+    from repro.core import partition as partition_lib
+
+    graph_list = list(graphs)
+    if not graph_list:
+        raise ValueError("pack_bucket needs at least one graph")
+    idxs = tuple(range(len(graph_list))) if indices is None \
+        else tuple(indices)
+    if len(idxs) != len(graph_list):
+        raise ValueError(
+            f"indices length {len(idxs)} != batch size {len(graph_list)}")
+    bsz = len(graph_list)
+    src = np.full((bsz, cap), PAD_VERTEX, np.int32)
+    dst = np.full((bsz, cap), PAD_VERTEX, np.int32)
+    key = np.full((bsz, cap), keys_lib.INF_KEY, np.uint64)
+    for r, g in enumerate(graph_list):
+        n, m = g.num_vertices, g.num_edges
+        if n > n_pad or m > cap:
+            raise ValueError(
+                f"lane {r} does not fit bucket ({n_pad}, {cap}): "
+                f"num_vertices={n}, num_edges={m}")
+        src[r, :m] = g.src
+        dst[r, :m] = g.dst
+        key[r, :m] = g.packed_keys
+    return GraphBatch(
+        indices=idxs,
+        graphs=tuple(graph_list),
+        n_pad=int(n_pad), cap=int(cap),
+        num_vertices=np.array(
+            [g.num_vertices for g in graph_list], np.int64),
+        num_edges=np.array([g.num_edges for g in graph_list], np.int64),
+        src=src, dst=dst, key=key,
+        slot=partition_lib.batched_slots(bsz, cap))
 
 
 def pack_batch(
@@ -438,8 +521,6 @@ def pack_batch(
     exceeding either capacity raises ``ValueError`` (the serving-path
     guard: an oversized query must be rejected, not silently truncated).
     """
-    from repro.core import partition as partition_lib
-
     if bucket not in BATCH_BUCKETS:
         raise ValueError(
             f"unknown batch bucket policy {bucket!r}; options: "
@@ -458,29 +539,11 @@ def pack_batch(
                 f"> max_edges={max_edges}")
         buckets.setdefault(_bucket_shape(n, m, bucket), []).append(i)
 
-    out = []
-    for (n_pad, cap), idxs in sorted(buckets.items()):
-        bsz = len(idxs)
-        src = np.full((bsz, cap), PAD_VERTEX, np.int32)
-        dst = np.full((bsz, cap), PAD_VERTEX, np.int32)
-        key = np.full((bsz, cap), keys_lib.INF_KEY, np.uint64)
-        for r, i in enumerate(idxs):
-            g = graph_list[i]
-            m = g.num_edges
-            src[r, :m] = g.src
-            dst[r, :m] = g.dst
-            key[r, :m] = g.packed_keys
-        out.append(GraphBatch(
-            indices=tuple(idxs),
-            graphs=tuple(graph_list[i] for i in idxs),
-            n_pad=n_pad, cap=cap,
-            num_vertices=np.array(
-                [graph_list[i].num_vertices for i in idxs], np.int64),
-            num_edges=np.array(
-                [graph_list[i].num_edges for i in idxs], np.int64),
-            src=src, dst=dst, key=key,
-            slot=partition_lib.batched_slots(bsz, cap)))
-    return out
+    return [
+        pack_bucket([graph_list[i] for i in idxs], n_pad, cap,
+                    indices=tuple(idxs))
+        for (n_pad, cap), idxs in sorted(buckets.items())
+    ]
 
 
 def _capacity(spec: GraphSpec, num_shards: int) -> int:

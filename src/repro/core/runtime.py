@@ -44,6 +44,7 @@ This module owns the pieces that are engine-independent:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -62,12 +63,35 @@ INTERVAL_PIPELINES = (0, 1)
 class EngineStats:
     """Host↔device traffic ledger common to every engine driver.
 
-    ``host_syncs`` counts blocking transfer points (the driver adds one per
-    interval; engine hooks add any extras they perform, e.g. the final state
-    fetch or a legacy path's winner-bitmap readback).  ``intervals`` counts
-    driver dispatches — for a device-resident loop that is one per
-    ``check_frequency`` steps; for a legacy host loop it equals the number
-    of rounds/supersteps.
+    ``host_syncs`` counts blocking transfer points: :func:`interval_loop`
+    adds exactly one per consumed interval readback, and engine hooks add
+    one for every blocking transfer they perform OUTSIDE the interval
+    readback — mirrored into ``extra_syncs`` at the same site.  The
+    pipeline-invariant contract, asserted by the cross-engine contract
+    test, is therefore
+
+        ``host_syncs == intervals + extra_syncs``
+
+    with the engine-specific ``extra_syncs`` values:
+
+    * single-graph device loops (Borůvka, GHS) — 1, the final state fetch,
+      so ``host_syncs == intervals + 1`` for THOSE engines only;
+    * the batched driver (DESIGN.md §8) — one final mask fetch per bucket,
+      so ``extra_syncs == buckets``;
+    * the filter hybrid (DESIGN.md §10) — the sub-solves' final fetches
+      plus one keep-mask fetch per filter pass, summed through
+      ``BatchStats.merge``;
+    * legacy host loops — per-round winner/label readbacks and compaction
+      re-uploads, one ``extra_syncs`` each.
+
+    ``intervals`` counts driver dispatches — for a device-resident loop
+    that is one per ``check_frequency`` steps; for a legacy host loop it
+    equals the number of rounds/supersteps.
+
+    ``edge_staging`` records which :func:`prepare_edges` path staged the
+    engine's input: ``"device"`` (the DeviceEdges no-host-round-trip
+    hand-off) or ``"host"`` (layout built host-side and uploaded).  Empty
+    for engines that do not route through ``prepare_edges``.
 
     ``rounds_per_graph`` is filled by batched drivers (DESIGN.md §8): one
     round/superstep count per input graph, in input order.  Single-graph
@@ -80,18 +104,20 @@ class EngineStats:
 
     Overlap-aware accounting (DESIGN.md §11): ``host_syncs`` and
     ``intervals`` always count CONSUMED readbacks/dispatches, so the
-    ``host_syncs == intervals + 1`` contract is pipeline-invariant.
-    ``overlapped_syncs`` counts the readbacks that were consumed while a
-    successor interval was already in flight (0 on a sequential loop);
-    ``speculative_intervals`` counts trailing dispatches whose scalars were
-    never fetched because termination had already been observed (their
-    device work is a provable no-op — see interval_loop).  ``comm_bytes``
-    is the per-shard on-wire byte total of the engine's cross-shard
-    reductions under the selected ``params.collective`` (0 off-mesh).
+    contract above is pipeline-invariant.  ``overlapped_syncs`` counts the
+    readbacks that were consumed while a successor interval was already in
+    flight (0 on a sequential loop); ``speculative_intervals`` counts
+    trailing dispatches whose scalars were never fetched because
+    termination had already been observed (their device work is a provable
+    no-op — see interval_loop).  ``comm_bytes`` is the per-shard on-wire
+    byte total of the engine's cross-shard reductions under the selected
+    ``params.collective`` (0 off-mesh).
     """
 
     host_syncs: int = 0
     intervals: int = 0
+    extra_syncs: int = 0
+    edge_staging: str = ""
     rounds_per_graph: tuple = ()
     edges_filtered: int = 0
     filter_passes: int = 0
@@ -276,6 +302,9 @@ class EdgeBundle:
     num_vertices: int
     num_edges: int
     source: Any
+    staging: str = "host"       # which prepare_edges path staged the input:
+                                # "device" — DeviceEdges handed over in place
+                                # "host"   — host layout built + uploaded
 
     def graph(self) -> Graph:
         return as_graph(self.source)
@@ -293,6 +322,13 @@ def prepare_edges(
       to the engine as-is, no edge ever crossing back to host.  (Non-block
       partitioners fall back to the host mirror: their layouts are host
       decisions by design.)
+
+    The taken path is recorded in ``EdgeBundle.staging`` (drivers surface
+    it as ``EngineStats.edge_staging``), and a DeviceEdges input that
+    CANNOT take the fast path — non-block partitioner, or a capacity not
+    divisible by the engine's shard count — emits a ``UserWarning`` naming
+    the reason, instead of silently mirroring the edges through host
+    memory.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import keys as keys_lib
@@ -307,9 +343,11 @@ def prepare_edges(
         return (jax.device_put(a, edge_sh) if edge_sh is not None
                 else jnp.asarray(a))
 
+    staging = "host"
     if (isinstance(source, pipeline_lib.DeviceEdges)
             and part.name == "block"
             and source.capacity % num_shards == 0):
+        staging = "device"
         cap = source.capacity
         block = cap // num_shards
         eid = np.arange(cap, dtype=np.int64)
@@ -322,6 +360,15 @@ def prepare_edges(
                                put(source.key))
         n, m = source.num_vertices, source.num_edges
     else:
+        if isinstance(source, pipeline_lib.DeviceEdges):
+            why = (f"partitioner {part.name!r} is a host-side layout "
+                   f"decision" if part.name != "block" else
+                   f"capacity {source.capacity} is not divisible by "
+                   f"num_shards {num_shards}")
+            warnings.warn(
+                f"DeviceEdges cannot take the no-host-round-trip fast "
+                f"path ({why}); falling back to a full host mirror",
+                stacklevel=2)
         graph = as_graph(source)
         layout = partition_lib.build_edge_layout(
             graph, part, num_shards, chunk)
@@ -340,7 +387,7 @@ def prepare_edges(
                % layout.block).astype(np.int32)
     return EdgeBundle(layout=layout, src=src_d, dst=dst_d, key=key_d,
                       slot=put(slot_np), num_vertices=n, num_edges=m,
-                      source=source)
+                      source=source, staging=staging)
 
 
 def vertex_partitioned(graph: Graph, partitioner_name: str,

@@ -10,11 +10,20 @@ from repro.models.config import ModelConfig
 
 
 def make_prefill_step(cfg: ModelConfig, *, max_len: int):
+    """Returns ``prefill_step(params, batch) -> (logits, state)`` — ALWAYS a
+    2-tuple, for every family.  encdec's native ``model.prefill`` returns
+    ``(logits, cache, cross)``; it is normalised here to
+    ``(logits, (cache, cross))`` so the state round-trips opaquely into
+    :func:`make_decode_step` (which unpacks the pair itself).  Callers must
+    not probe tuple arity — that pattern mis-shaped the decode state when a
+    family's native return drifted."""
     model = get_model(cfg)
 
     def prefill_step(params, batch):
         if cfg.family == "encdec":
-            return model.prefill(params, batch, cfg, max_len=max_len)
+            logits, cache, cross = model.prefill(params, batch, cfg,
+                                                 max_len=max_len)
+            return logits, (cache, cross)
         if cfg.family == "vlm":
             # cache must hold prompt + patch-prefix tokens
             return model.prefill(params, batch["tokens"], cfg,

@@ -21,6 +21,11 @@ def _edgeless(n=6):
     return preprocess(np.zeros(0), np.zeros(0), np.zeros(0, np.float32), n)
 
 
+def _singleton():
+    """One vertex, zero edges — the smallest legal graph."""
+    return preprocess(np.zeros(0), np.zeros(0), np.zeros(0, np.float32), 1)
+
+
 def _mixed_batch():
     """Mixed kinds, scales, AND degenerate shapes — several buckets."""
     return [
@@ -62,6 +67,36 @@ def test_batched_sync_contract():
     assert stats.buckets >= 2                  # mixed shapes → real buckets
     assert stats.intervals >= stats.buckets
     assert stats.host_syncs == stats.intervals + stats.buckets
+    # The batched driver's extra syncs ARE the per-bucket final fetches.
+    assert stats.extra_syncs == stats.buckets
+
+
+@pytest.mark.parametrize("bucket", ["pow2", "exact"])
+def test_degenerate_shapes_solve_under_both_policies(bucket):
+    """Zero-edge graphs land in cap=1 buckets under ``"exact"`` but cap=8
+    under ``"pow2"`` — BOTH lanes must solve and unpack correctly, alone
+    and mixed into multi-graph batches (empty, single-edge, and
+    singleton-vertex graphs ride real traffic)."""
+    # The policy split this test pins down:
+    assert pipeline.bucket_shape(6, 0, bucket="pow2") == (8, 8)
+    assert pipeline.bucket_shape(6, 0, bucket="exact") == (6, 1)
+    assert pipeline.bucket_shape(1, 0, bucket="exact") == (1, 1)
+
+    degenerates = [_edgeless(), _singleton(), _single_edge(), _edgeless(3)]
+    mixed = degenerates + [generators.generate("rmat", 6, seed=5),
+                           generators.generate("rmat", 7, seed=1),
+                           _edgeless(5)]
+    params = GHSParams(batch_bucket=bucket)
+    for graphs in (degenerates, mixed):
+        results, stats = minimum_spanning_forests(graphs, params=params)
+        assert stats.host_syncs == stats.intervals + stats.extra_syncs
+        for i, (g, res) in enumerate(zip(graphs, results)):
+            want = kruskal_ref.kruskal(g)
+            assert np.array_equal(res.edge_mask, want.edge_mask), (bucket, i)
+            assert res.num_components == want.num_components, (bucket, i)
+            single, _ = minimum_spanning_forest(g)
+            assert np.array_equal(res.edge_mask, single.edge_mask), \
+                (bucket, i)
 
 
 def test_batched_compaction_bit_identical():

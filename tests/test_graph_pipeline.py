@@ -79,9 +79,80 @@ def test_device_edges_feed_engines():
     want = kruskal_ref.kruskal(pipeline.build_host(spec))
     got_b, st = minimum_spanning_forest(dev, method="boruvka")
     assert np.array_equal(got_b.edge_mask, want.edge_mask)
-    assert st.host_syncs == st.intervals + 1
+    assert st.host_syncs == st.intervals + st.extra_syncs
+    assert st.extra_syncs == 1               # the final state fetch
     got_g, _ = minimum_spanning_forest(dev, method="ghs")
     assert np.array_equal(got_g.edge_mask, want.edge_mask)
+
+
+def test_prepare_edges_staging_signal():
+    """prepare_edges records which path staged the input and WARNS when a
+    DeviceEdges source silently misses the no-host-round-trip fast path
+    (regression: the fallback used to be invisible)."""
+    import warnings
+
+    from repro.core import runtime
+
+    spec = GraphSpec("rmat", 7, seed=2)
+    dev = pipeline.build(spec)
+
+    # Block layout, single shard: capacity % 1 == 0, fast path engages.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any warning here is a bug
+        bundle = runtime.prepare_edges(dev, "block", None, chunk=8)
+    assert bundle.staging == "device"
+
+    # Non-block partitioner: host mirror, loudly.
+    with pytest.warns(UserWarning, match="fast path"):
+        bundle = runtime.prepare_edges(dev, "hashed", None, chunk=8)
+    assert bundle.staging == "host"
+
+    # Host Graph input: host staging is the contract, not a fallback.
+    g = generators.generate("rmat", 6, seed=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        bundle = runtime.prepare_edges(g, "block", None, chunk=8)
+    assert bundle.staging == "host"
+
+    # The engine surfaces the taken path on its stats ledger.
+    _, st = minimum_spanning_forest(dev, method="boruvka")
+    assert st.edge_staging == "device"
+    _, st = minimum_spanning_forest(g, method="boruvka")
+    assert st.edge_staging == "host"
+
+
+def test_prepare_edges_fast_path_every_shard_count():
+    """The DeviceEdges fast path must engage for block layouts at every
+    shard count the suite sweeps (pipeline capacities are pow2 multiples
+    of the shard count, so capacity % num_shards == 0 by construction)."""
+    out = _run_child(r"""
+import json
+import warnings
+import numpy as np
+from repro.compat import make_mesh
+from repro.core import kruskal_ref, pipeline
+from repro.core.mst_api import minimum_spanning_forest
+from repro.core.pipeline import GraphSpec
+
+rows = []
+for shards in (1, 2, 4):
+    mesh = make_mesh((shards,), ("x",)) if shards > 1 else None
+    spec = GraphSpec("rmat", 8, seed=5)
+    dev = pipeline.build(spec, mesh=mesh)
+    want = kruskal_ref.kruskal(pipeline.build_host(spec))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # a fast-path miss warns -> fails
+        res, st = minimum_spanning_forest(dev, method="boruvka", mesh=mesh)
+    rows.append(dict(shards=shards, staging=st.edge_staging,
+                     exact=bool(np.array_equal(res.edge_mask,
+                                               want.edge_mask))))
+print(json.dumps(rows))
+""", devices=4)
+    rows = json.loads(out.strip().splitlines()[-1])
+    assert [r["shards"] for r in rows] == [1, 2, 4]
+    for r in rows:
+        assert r["staging"] == "device", r
+        assert r["exact"], r
 
 
 # ---------------------------------------------------------------------------

@@ -56,14 +56,41 @@ def test_prefill_decode_consistency(arch):
     from repro.train.serve_step import make_decode_step, make_prefill_step
     pf = make_prefill_step(cfg, max_len=24)
     dec = make_decode_step(cfg)
-    out = pf(params, {k: v for k, v in batch.items() if k != "labels"})
-    logits = out[0]
-    state = out[1] if len(out) == 2 else (out[1], out[2])
+    logits, state = pf(params, {k: v for k, v in batch.items()
+                                if k != "labels"})
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None]
     nxt2, state, logits2 = dec(params, state, nxt, jax.random.PRNGKey(1))
     assert np.isfinite(np.asarray(logits2, np.float32)).all()
     assert nxt2.shape == (2, 1)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "seamless-m4t-large-v2",
+                                  "rwkv6-3b"])
+def test_prefill_unpacking_contract(arch):
+    """make_prefill_step returns EXACTLY (logits, state) for every family.
+
+    Regression for the serve-path bug where callers probed tuple arity
+    (``out[1] if len(out) == 2 else (out[1], out[2])``): encdec's native
+    prefill returns a 3-tuple, so the probe silently built a mis-shaped
+    decode state.  The contract is now normalised inside make_prefill_step;
+    the state must round-trip into decode_step unchanged in structure."""
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    batch = synth_batch(2, cfg, 2, 16)
+    from repro.train.serve_step import make_decode_step, make_prefill_step
+    out = make_prefill_step(cfg, max_len=24)(
+        params, {k: v for k, v in batch.items() if k != "labels"})
+    assert isinstance(out, tuple) and len(out) == 2
+    logits, state = out
+    if cfg.family == "encdec":
+        # encdec state is the (cache, cross) pair decode_step unpacks.
+        assert isinstance(state, tuple) and len(state) == 2
+    nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None]
+    _, state2, _ = make_decode_step(cfg)(params, state, nxt,
+                                         jax.random.PRNGKey(1))
+    assert jax.tree.structure(state2) == jax.tree.structure(state)
 
 
 def test_remat_matches_no_remat():

@@ -125,6 +125,43 @@ def test_device_loop_host_sync_contract():
     assert st.host_syncs == st.intervals + 1
 
 
+@pytest.mark.parametrize("method", ["boruvka", "ghs", "filter_boruvka"])
+@pytest.mark.parametrize("depth", [0, 1])
+def test_sync_contract_cross_engine(method, depth):
+    """The REAL EngineStats invariant, asserted across every engine and
+    both interval-pipeline depths: ``host_syncs == intervals +
+    extra_syncs``.  interval_loop books interval readbacks into host_syncs
+    and intervals in lockstep; every OTHER blocking transfer an engine
+    makes (final state fetches, filter keep-mask fetches, legacy re-uploads)
+    must book into BOTH host_syncs and extra_syncs.  (The docstring used to
+    promise ``host_syncs == intervals + 1``, which only the single-graph
+    device loops honor.)"""
+    g = generators.generate("rmat", 7, seed=5)
+    want = kruskal_ref.kruskal(g)
+    res, st = minimum_spanning_forest(
+        g, method=method, params=GHSParams(interval_pipeline=depth))
+    assert np.array_equal(res.edge_mask, want.edge_mask)
+    assert st.intervals >= 1
+    assert st.extra_syncs >= 1
+    assert st.host_syncs == st.intervals + st.extra_syncs
+    if method in ("boruvka", "ghs"):
+        # Single-graph device loops: the +1 is exactly the final fetch.
+        assert st.extra_syncs == 1
+
+
+@pytest.mark.parametrize("method", ["boruvka", "ghs"])
+def test_sync_contract_legacy_host_loops(method):
+    """The same invariant holds on the legacy host-driven loops, where
+    extra_syncs additionally counts per-round readbacks and compaction
+    re-uploads."""
+    g = generators.generate("rmat", 7, seed=5)
+    want = kruskal_ref.kruskal(g)
+    res, st = minimum_spanning_forest(
+        g, method=method, params=GHSParams(round_loop="host"))
+    assert np.array_equal(res.edge_mask, want.edge_mask)
+    assert st.host_syncs == st.intervals + st.extra_syncs
+
+
 def test_ghs_round_loop_host_vs_device_identical():
     """The fused device superstep loop and the legacy per-superstep driver
     run the same supersteps and elect the same forest; the device loop's

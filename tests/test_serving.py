@@ -1,0 +1,284 @@
+"""Continuous-batching MST service (DESIGN.md §12): deterministic dispatch
+under a fake clock (no sleeps in any assertion), typed backpressure sheds,
+arrival-order completion, and every served forest oracle-exact."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import generators, kruskal_ref, mst_api, pipeline
+from repro.core.graph import preprocess
+from repro.core.params import GHSParams
+from repro.launch.serve import (MSTService, OversizeError, QueueFullError,
+                                run_poisson)
+
+
+class FakeClock:
+    """Injectable time source: tests advance it explicitly instead of
+    sleeping, so deadline expiry is exact and assertions never race."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _g(seed, scale=4, degree=4):
+    return generators.generate("rmat", scale, avg_degree=degree, seed=seed)
+
+
+# Seeds whose scale-4 rmat graphs all share the (n_pad=16, cap=32) pow2
+# bucket — the same-bucket tests draw from this pool.
+_POOL = (0, 2, 3, 4, 5, 6, 9, 10, 12, 13)
+
+
+def _same_bucket(k):
+    return [_g(s) for s in _POOL[:k]]
+
+
+def _params(**kw):
+    base = dict(serve_lanes=3, serve_max_wait_ms=50.0, serve_max_queue=6,
+                batch_max_vertices=64, batch_max_edges=256)
+    base.update(kw)
+    return GHSParams(**base)
+
+
+def _assert_oracle(graph, result):
+    oracle = kruskal_ref.kruskal(graph)
+    assert np.array_equal(result.edge_mask, oracle.edge_mask)
+    assert result.num_components == oracle.num_components
+
+
+# ---------------------------------------------------------------------------
+# Dispatch triggers
+# ---------------------------------------------------------------------------
+
+def test_size_flush_fires_without_time_passing():
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    graphs = _same_bucket(3)                 # one bucket: full at 3 lanes
+    futs = [svc.submit(g) for g in graphs]
+    assert not any(f.done() for f in futs)   # submit never dispatches
+    assert svc.poll(now=0.0) == 1
+    assert svc.stats.size_flushes == 1
+    assert svc.stats.deadline_flushes == 0
+    assert svc.stats.ghost_lanes == 0
+    for g, f in zip(graphs, futs):
+        assert f.done()
+        _assert_oracle(g, f.result())
+
+
+def test_deadline_flush_pads_ghost_lanes():
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    fut = svc.submit(_g(7))
+    # Under the deadline: nothing moves, however often we poll.
+    assert svc.poll(now=0.049) == 0
+    assert not fut.done()
+    # At the deadline: the part-full bucket flushes, padded to 3 lanes.
+    assert svc.poll(now=0.050) == 1
+    assert svc.stats.deadline_flushes == 1
+    assert svc.stats.size_flushes == 0
+    assert svc.stats.ghost_lanes == 2
+    assert fut.done()
+    _assert_oracle(_g(7), fut.result())
+
+
+def test_deadline_measured_from_oldest_request():
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    svc.submit(_g(_POOL[0]))                 # t = 0
+    clock.advance(0.04)
+    svc.submit(_g(_POOL[1]))                 # t = 0.04, same bucket
+    # 10 ms later the OLDEST is 50 ms old: both flush together.
+    assert svc.poll(now=0.050) == 1
+    assert svc.stats.deadline_flushes == 1
+    assert svc.stats.completed == 2
+    assert svc.stats.ghost_lanes == 1
+
+
+def test_bit_identical_to_single_graph_solve():
+    svc = MSTService(_params(), clock=FakeClock())
+    graphs = _same_bucket(3)
+    futs = [svc.submit(g) for g in graphs]
+    svc.poll(now=0.0)
+    for g, f in zip(graphs, futs):
+        single, _ = mst_api.minimum_spanning_forest(g)
+        assert np.array_equal(f.result().edge_mask, single.edge_mask)
+
+
+def test_completion_in_arrival_order():
+    svc = MSTService(_params(), clock=FakeClock())
+    order = []
+    for i, g in enumerate(_same_bucket(3)):
+        fut = svc.submit(g)
+        fut.add_done_callback(lambda f, i=i: order.append(i))
+    svc.poll(now=0.0)
+    assert order == [0, 1, 2]
+
+
+def test_mixed_buckets_route_and_drain():
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    graphs = [_g(1, scale=3), _g(2, scale=5), _g(3, scale=3),
+              preprocess(np.zeros(0), np.zeros(0),
+                         np.zeros(0, np.float32), 6)]
+    futs = [svc.submit(g) for g in graphs]
+    assert len(svc._queues) >= 2             # distinct shapes, own queues
+    assert svc.poll(now=0.0) == 0            # none full, none expired
+    assert svc.drain() == len(svc._queues)
+    assert svc.stats.drain_flushes == len(svc._queues)
+    for g, f in zip(graphs, futs):
+        _assert_oracle(g, f.result())
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+def test_oversize_shed_is_typed_and_counted():
+    svc = MSTService(_params(batch_max_edges=8), clock=FakeClock())
+    with pytest.raises(OversizeError, match="exceeds pack_batch capacity"):
+        svc.submit(_g(3, scale=5, degree=8))
+    assert svc.stats.shed_oversize == 1
+    assert svc.stats.accepted == 0
+    assert svc.queue_depth() == 0            # shed requests never queue
+
+
+def test_queue_full_shed_then_poll_recovers():
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    futs = [svc.submit(g) for g in _same_bucket(6)]   # serve_max_queue
+    with pytest.raises(QueueFullError, match="queue is full"):
+        svc.submit(_g(_POOL[6]))
+    assert svc.stats.shed_queue_full == 1
+    assert svc.stats.max_queue_depth == 6
+    # One poll drains the backlog as two size flushes; admission reopens.
+    assert svc.poll(now=0.0) == 2
+    assert svc.stats.size_flushes == 2
+    assert all(f.done() for f in futs)
+    svc.submit(_g(_POOL[7]))
+    assert svc.stats.accepted == 7
+
+
+def test_shed_rate_accounting():
+    svc = MSTService(_params(batch_max_edges=8), clock=FakeClock())
+    svc.submit(preprocess(np.array([0]), np.array([1]),
+                          np.array([0.5], np.float32), 2))
+    with pytest.raises(OversizeError):
+        svc.submit(_g(3, scale=5, degree=8))
+    assert svc.stats.shed == 1
+    assert svc.stats.shed_rate == pytest.approx(0.5)
+
+
+def test_service_rejects_inconsistent_knobs():
+    with pytest.raises(ValueError, match="serve_lanes"):
+        MSTService(_params(serve_lanes=0))
+    with pytest.raises(ValueError, match="serve_max_queue"):
+        MSTService(_params(serve_lanes=4, serve_max_queue=2))
+
+
+# ---------------------------------------------------------------------------
+# Warmup lattice
+# ---------------------------------------------------------------------------
+
+def test_warmup_covers_the_pow2_lattice():
+    p = _params(batch_max_vertices=8, batch_max_edges=16)
+    svc = MSTService(p, clock=FakeClock())
+    # n_pad in {1, 2, 4, 8} x cap in {8, 16} = 8 shapes.
+    assert svc.warmup() == 8
+    assert svc.stats.buckets_warmed == 8
+    # Warmup solves ghosts only: no request counters move.
+    assert svc.stats.accepted == svc.stats.completed == 0
+    assert svc.stats.flushes == 0
+
+
+def test_warmup_skips_unbounded_and_exact_policies():
+    assert MSTService(_params(batch_max_vertices=0, batch_max_edges=0),
+                      clock=FakeClock()).warmup() == 0
+    assert MSTService(
+        _params(batch_bucket="exact"), clock=FakeClock()).warmup() == 0
+
+
+# ---------------------------------------------------------------------------
+# Poisson driver in virtual time
+# ---------------------------------------------------------------------------
+
+def test_run_poisson_virtual_time_deterministic():
+    clock = FakeClock()
+    svc = MSTService(_params(serve_max_queue=32), clock=clock)
+    graphs = [_g(s, scale=3) for s in range(8)]
+    futs = run_poisson(svc, graphs, rate=200.0, seed=1,
+                       sleep=clock.advance)
+    assert len(futs) == 8
+    served = [f for f in futs if f is not None]
+    assert len(served) == 8 - svc.stats.shed
+    assert all(f.done() for f in served)
+    assert svc.stats.completed == len(served)
+    assert len(svc.stats.latencies_ms) == len(served)
+    assert svc.stats.graphs_per_s > 0
+    for g, f in zip(graphs, futs):
+        if f is not None:
+            _assert_oracle(g, f.result())
+
+
+# ---------------------------------------------------------------------------
+# Incremental admission primitives (pipeline.bucket_shape / pack_bucket)
+# ---------------------------------------------------------------------------
+
+def test_bucket_shape_matches_pack_batch_routing():
+    graphs = [_g(1, scale=3), _g(2, scale=5), _g(3, scale=3)]
+    for bucket in ("pow2", "exact"):
+        batches = pipeline.pack_batch(graphs, bucket=bucket)
+        routed = {}
+        for i, g in enumerate(graphs):
+            shape = pipeline.bucket_shape(g.num_vertices, g.num_edges,
+                                          bucket=bucket)
+            routed.setdefault(shape, []).append(i)
+        assert routed == {(b.n_pad, b.cap): list(b.indices)
+                          for b in batches}
+
+
+def test_bucket_shape_raises_like_pack_batch():
+    with pytest.raises(ValueError, match="unknown batch bucket policy"):
+        pipeline.bucket_shape(4, 4, bucket="golf")
+    with pytest.raises(ValueError, match="num_vertices=100 > max_vertices"):
+        pipeline.bucket_shape(100, 4, max_vertices=64)
+    with pytest.raises(ValueError, match="num_edges=500 > max_edges"):
+        pipeline.bucket_shape(8, 500, max_edges=256)
+
+
+def test_pack_bucket_validates_fit_and_indices():
+    g = _g(5, scale=3)
+    with pytest.raises(ValueError, match="does not fit bucket"):
+        pipeline.pack_bucket([g], 2, 4)
+    with pytest.raises(ValueError, match="indices length"):
+        pipeline.pack_bucket([g], 8, 256, indices=(0, 1))
+    with pytest.raises(ValueError, match="at least one graph"):
+        pipeline.pack_bucket([], 8, 8)
+
+
+def test_solve_packed_equals_batched_entry():
+    graphs = [_g(s, scale=4) for s in range(4)]
+    n_pad, cap = pipeline.bucket_shape(
+        max(g.num_vertices for g in graphs),
+        max(g.num_edges for g in graphs))
+    batch = pipeline.pack_bucket(graphs, n_pad, cap)
+    results, stats = mst_api.solve_packed(batch)
+    ref, _ = mst_api.minimum_spanning_forests(graphs)
+    for got, want in zip(results, ref):
+        assert np.array_equal(got.edge_mask, want.edge_mask)
+    assert stats.host_syncs == stats.intervals + stats.extra_syncs
+
+
+def test_solve_packed_rejects_host_loop():
+    g = _g(6, scale=3)
+    batch = pipeline.pack_bucket([g], 8, 64)
+    with pytest.raises(ValueError, match="round_loop='device'"):
+        mst_api.solve_packed(
+            batch, params=dataclasses.replace(GHSParams(),
+                                              round_loop="host"))

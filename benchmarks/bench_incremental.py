@@ -1,0 +1,188 @@
+"""Incremental-update benchmark: apply_updates vs a from-scratch re-solve.
+
+The serving claim of DESIGN.md §13: for a small edit batch on a large
+solved graph, the cycle/cut probe certifies most edges out of the final
+solve, so applying the batch is far cheaper than re-solving the merged
+graph — the acceptance bar is ≥ 5x update-batch throughput at rmat
+scale 14.
+
+Each timed step draws one randomized batch (inserts + tree deletes +
+arbitrary deletes), then measures BOTH paths on the SAME batch:
+
+* ``update``  — ``mst_api.apply_updates`` (merge + probe + candidate
+  solve, one fused mask readback);
+* ``resolve`` — ``apply_edge_batch`` + a full ``boruvka`` solve of the
+  merged graph (what a server without the incremental pass would run).
+
+The two paths' forests are compared bit-exact on every step (the
+re-solve IS the bit-identity reference), and the final state is checked
+against the Kruskal oracle.  The evolving state advances with the update
+path, so every step sees a realistically mutated graph.
+
+Emits / merges into ``BENCH_incremental.json`` (``--out``).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_incremental.py
+    PYTHONPATH=src python benchmarks/bench_incremental.py --scale 12
+    PYTHONPATH=src python benchmarks/bench_incremental.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from common import pin_backend
+
+
+def _random_batch(rng, state, n_ins: int, n_tree_del: int, n_rand_del: int):
+    import numpy as np
+    from repro.core.incremental import EdgeBatch
+
+    g = state.graph
+    n = g.num_vertices
+    ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+            float(rng.random() * 0.98 + 0.01)) for _ in range(n_ins)]
+    dels = []
+    tree = np.flatnonzero(state.forest.edge_mask)
+    if tree.size and n_tree_del:
+        for i in rng.choice(tree, size=min(n_tree_del, tree.size),
+                            replace=False):
+            dels.append((int(g.src[i]), int(g.dst[i])))
+    dels += [(int(rng.integers(0, n)), int(rng.integers(0, n)))
+             for _ in range(n_rand_del)]
+    return EdgeBatch.make(ins, dels)
+
+
+def bench_updates(scale: int, steps: int, batch_inserts: int,
+                  levels: int, seed: int) -> dict:
+    import numpy as np
+    from repro.core import generators, kruskal_ref
+    from repro.core.incremental import apply_edge_batch
+    from repro.core.mst_api import (apply_updates, incremental_forest,
+                                    minimum_spanning_forest)
+    from repro.core.params import GHSParams
+
+    params = GHSParams(update_levels=levels)
+    g = generators.generate("rmat", scale, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+
+    t0 = time.perf_counter()
+    state, _ = incremental_forest(g, params=params)
+    initial_solve_s = time.perf_counter() - t0
+
+    # Warm both paths through a few UNTIMED stream steps: the engine's
+    # pow2 compaction ladder compiles one executable per newly-seen block
+    # size, and successive batches touch slightly different ladders, so a
+    # single warm call is not enough to reach steady state.
+    warm_steps = 3
+    for _ in range(warm_steps):
+        warm = _random_batch(rng, state, batch_inserts, 2, 2)
+        state, _ = apply_updates(state, warm, params=params)
+        minimum_spanning_forest(apply_edge_batch(state.graph, warm),
+                                params=params)
+
+    rows = []
+    for step in range(steps):
+        batch = _random_batch(rng, state, batch_inserts, 2, 2)
+
+        t0 = time.perf_counter()
+        new_state, st = apply_updates(state, batch, params=params)
+        update_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        g2 = apply_edge_batch(state.graph, batch)
+        plain, _ = minimum_spanning_forest(g2, params=params)
+        resolve_s = time.perf_counter() - t0
+
+        assert np.array_equal(new_state.forest.edge_mask,
+                              plain.edge_mask), f"step {step} diverged"
+        rows.append(dict(
+            step=step, update_seconds=update_s, resolve_seconds=resolve_s,
+            speedup=resolve_s / update_s,
+            updates_applied=st.updates_applied,
+            replacement_probes=st.replacement_probes,
+            candidate_count=st.candidate_count,
+            edges_filtered=st.edges_filtered,
+            host_syncs=st.host_syncs))
+        state = new_state
+        print(f"  step {step}: update {update_s * 1e3:7.1f}ms  "
+              f"resolve {resolve_s * 1e3:7.1f}ms  "
+              f"-> {rows[-1]['speedup']:5.2f}x  "
+              f"candidates {st.candidate_count}/{state.graph.num_edges}")
+
+    want = kruskal_ref.kruskal(state.graph)
+    assert np.array_equal(state.forest.edge_mask, want.edge_mask), \
+        "final state diverged from the Kruskal oracle"
+
+    upd = float(np.mean([r["update_seconds"] for r in rows]))
+    res = float(np.mean([r["resolve_seconds"] for r in rows]))
+    return dict(
+        kind="rmat", scale=scale, seed=seed,
+        num_vertices=state.graph.num_vertices,
+        num_edges=state.graph.num_edges,
+        batch_size=batch_inserts + 4, steps=steps,
+        update_levels=levels,
+        initial_solve_seconds=initial_solve_s,
+        mean_update_seconds=upd, mean_resolve_seconds=res,
+        update_batches_per_second=1.0 / upd,
+        speedup=res / upd,
+        mean_candidates=float(np.mean([r["candidate_count"]
+                                       for r in rows])),
+        oracle_exact=True, per_step=rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=14,
+                    help="rmat scale of the evolving graph")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="timed update batches")
+    ap.add_argument("--batch-inserts", type=int, default=48,
+                    help="inserted edges per batch (plus 2 tree deletes "
+                         "and 2 arbitrary deletes)")
+    ap.add_argument("--levels", type=int, default=16,
+                    help="update_levels of the cycle probe (16 balances "
+                         "probe cost against candidate count on rmat)")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: rmat scale 10, 3 batches, oracle-exact")
+    ap.add_argument("--out", default="BENCH_incremental.json")
+    args = ap.parse_args(argv)
+
+    pin_backend("cpu")
+
+    record = {}
+    if os.path.exists(args.out):
+        with open(args.out) as fh:
+            record = json.load(fh)
+
+    if args.smoke:
+        print("# incremental smoke — rmat scale 10, 3 update batches")
+        record["smoke"] = bench_updates(10, 3, 16, args.levels, args.seed)
+        r = record["smoke"]
+        print(f"  mean update {r['mean_update_seconds'] * 1e3:.1f}ms  "
+              f"resolve {r['mean_resolve_seconds'] * 1e3:.1f}ms  "
+              f"-> {r['speedup']:.2f}x (exact)")
+    else:
+        print(f"# incremental updates — rmat scale {args.scale}, "
+              f"{args.steps} batches of "
+              f"{args.batch_inserts}+4 edits")
+        record["updates"] = bench_updates(
+            args.scale, args.steps, args.batch_inserts, args.levels,
+            args.seed)
+        r = record["updates"]
+        print(f"  mean update {r['mean_update_seconds'] * 1e3:.1f}ms  "
+              f"resolve {r['mean_resolve_seconds'] * 1e3:.1f}ms  "
+              f"-> {r['speedup']:.2f}x  "
+              f"({r['update_batches_per_second']:.1f} batches/s)")
+
+    with open(args.out, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -871,13 +871,19 @@ def _run_interval_batch(
             jnp.all(done), r, census)
 
 
-@functools.lru_cache(maxsize=16)
+@functools.lru_cache(maxsize=256)
 def _build_batch_interval_fn(
         use_pallas: bool, contract_bits: Optional[Tuple[int, int]],
         election: str = "scatter") -> Callable:
     # The whole per-lane state is mutated (contraction rewrites the edge
     # arrays too) — donate it all for in-place reuse; rounds is traced, so
     # one executable serves every interval length per bucket shape.
+    # contract_bits is per (n_pad, cap) bucket shape, so the cache must
+    # hold the serving lattice's full combo set: evicting an entry
+    # destroys the jit object AND every executable warmup compiled
+    # through it, re-paying those compiles mid-request (a 256-vertex
+    # lattice has ~60 combos — the old maxsize=16 silently discarded
+    # most of the §12 warmup).
     donate = runtime.donation(0, 1, 2, 3, 4, 5, 6, 7)
     fn = partial(_run_interval_batch, use_pallas=use_pallas,
                  contract_bits=contract_bits, election=election)
@@ -914,12 +920,15 @@ def warm_bucket(
     Solving an all-ghost flush only compiles the load-cap trace — ghost
     lanes converge before ever compacting, so without this the FIRST real
     flush of a shape pays the post-shrink retraces mid-request, exactly
-    the latency spike warmup exists to prevent.  The interval fn's cache
-    key carries the ORIGINAL bucket's contraction bits, so the sub-cap
-    traces here are distinct from (not covered by) warming smaller
-    buckets.  Mirrors ``_solve_bucket``'s static-key computation on an
-    empty batch: the contraction gate and election lowering are
-    data-independent for (0, 1)-weight traffic.  Only the contracted
+    the latency spike warmup exists to prevent.  Under a bounded lattice
+    the widened uniform contraction bits (:func:`_lattice_contract_bits`)
+    make every cap share one fn object, so a larger cap's ladder covers
+    the smaller caps' load traces and re-warms are cache hits; without
+    bounds the fn cache key carries the ORIGINAL bucket's bits and the
+    sub-cap traces are per-cap.  Mirrors ``_solve_bucket``'s static-key
+    computation on an empty batch: the contraction gate and election
+    lowering are data-independent for (0, 1)-weight traffic.  Only the
+    contracted
     front-packed shrink path is warmed (the plain per-lane compact path
     runs only when the bit-gate fails, which pipeline weights never
     trigger).  Returns the number of executables compiled."""
@@ -929,6 +938,9 @@ def warm_bucket(
     contract_bits = ((s_bits, c_bits)
                      if params.compaction == "pow2"
                      and 2 * s_bits + 30 + c_bits <= 64 else None)
+    # Mirror _solve_bucket's widening so the fn object warmed here IS the
+    # runtime fn object (and sub-cap traces are shared across caps).
+    contract_bits = _widen_contract_bits(contract_bits, params)
     election = "scatter"
     if (runtime.resolve_round_kernel(params.round_kernel) == "pallas"
             and contract_bits is not None):
@@ -938,13 +950,18 @@ def warm_bucket(
 
     # The load cap itself plus every pow2 compaction target below it
     # (``finish`` only ever shrinks to ``max(pow2ceil(census), 8)``).
+    # A run-to-completion interval (>= the n_pad + 2 round bound, the §12
+    # dispatch policy) converges every lane inside the FIRST dispatch, so
+    # the shrink ladder can never run — warming it would compile
+    # executables the runtime cannot reach.
     caps = [cap]
-    c = 8
-    while c * 2 < cap:
-        c *= 2
-    while c >= 8 and c < cap:
-        caps.append(c)
-        c //= 2
+    if params.batch_check_frequency < n_pad + 2:
+        c = 8
+        while c * 2 < cap:
+            c *= 2
+        while c >= 8 and c < cap:
+            caps.append(c)
+            c //= 2
     compiled = 0
     with enable_x64():
         for cur in caps:
@@ -974,6 +991,47 @@ def warm_bucket(
     return compiled
 
 
+def _lattice_contract_bits(params: GHSParams) -> Optional[Tuple[int, int]]:
+    """Uniform contraction bit-widths for a bounded serving lattice.
+
+    When the params carry per-graph capacity bounds (the §12 service), every
+    bucket's packed rounds can use the LATTICE TOP's (s_bits, c_bits)
+    instead of its own: wider shift widths are sound (labels < n_pad ≤
+    n_top, slot ids < cap ≤ cap_top, and the ≤ 64-bit gate is checked at
+    the top), and uniform widths mean ONE jit fn object — hence one set of
+    per-shape executables — serves every cap's compaction ladder.  Without
+    this, each original cap keys its own fn object and the warmup lattice
+    compiles O(shapes · ladder) distinct interval executables whose JIT
+    code mappings can exhaust ``vm.max_map_count`` (observed: a
+    256-vertex/1024-edge lattice × 4 flush widths ran the process out of
+    mmaps mid-warmup)."""
+    if (params.compaction != "pow2" or not params.batch_max_vertices
+            or not params.batch_max_edges):
+        return None
+    n_top = _pow2ceil(int(params.batch_max_vertices))
+    cap_top = _pow2ceil(max(int(params.batch_max_edges), 8))
+    s_bits = max(n_top - 1, 1).bit_length()
+    c_bits = max(cap_top - 1, 1).bit_length()
+    if 2 * s_bits + 30 + c_bits > 64:
+        return None
+    return (s_bits, c_bits)
+
+
+def _widen_contract_bits(
+        contract_bits: Optional[Tuple[int, int]],
+        params: GHSParams) -> Optional[Tuple[int, int]]:
+    """Promote a bucket's own contraction bits to the lattice-top widths
+    when the params define a lattice that covers them (see
+    :func:`_lattice_contract_bits`)."""
+    if contract_bits is None:
+        return None
+    lat = _lattice_contract_bits(params)
+    if (lat is not None and lat[0] >= contract_bits[0]
+            and lat[1] >= contract_bits[1]):
+        return lat
+    return contract_bits
+
+
 def _contract_gate(batch) -> Optional[Tuple[int, int]]:
     """(s_bits, c_bits) when the bucket's contraction quadruple fits one
     uint64 — fragment labels need ``log2(n_pad)`` bits each, weight bits 30
@@ -1000,6 +1058,7 @@ def _solve_bucket(
     n_pad, cap, B = batch.n_pad, batch.cap, batch.batch_size
     contract_bits = (_contract_gate(batch)
                      if params.compaction == "pow2" else None)
+    contract_bits = _widen_contract_bits(contract_bits, params)
     # round_kernel="pallas" under vmap: the fused formulation IS the packed
     # round (n-scale recording + hooking); what changes is the election
     # lowering — scatter-free sort when the bucket passes the bit gate and

@@ -10,7 +10,8 @@ from typing import Optional
 
 from jax.sharding import Mesh
 
-from repro.core import boruvka_dist, filter_boruvka, ghs_message, runtime
+from repro.core import (boruvka_dist, filter_boruvka, ghs_message,
+                        incremental, runtime)
 from repro.core.kruskal_ref import ForestResult
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 
@@ -119,6 +120,44 @@ def solve_packed(
     """
     return boruvka_dist.solve_packed(
         batch, params=params, max_rounds=max_rounds)
+
+
+def incremental_forest(
+    graph,
+    method: str = "boruvka",
+    params: GHSParams = DEFAULT_PARAMS,
+    mesh: Optional[Mesh] = None,
+    **kw,
+) -> tuple[incremental.IncrementalForest, runtime.EngineStats]:
+    """Solve ``graph`` and wrap it as the evolving-graph handle that
+    :func:`apply_updates` consumes.  Any engine works — forests are
+    bit-identical across methods, so the handle is too."""
+    res, stats = minimum_spanning_forest(
+        graph, method=method, params=params, mesh=mesh, **kw)
+    return incremental.IncrementalForest(
+        graph=runtime.as_graph(graph), forest=res), stats
+
+
+def apply_updates(
+    forest: incremental.IncrementalForest,
+    edge_batch: incremental.EdgeBatch,
+    params: GHSParams = DEFAULT_PARAMS,
+    mesh: Optional[Mesh] = None,
+    max_rounds=None,
+) -> tuple[incremental.IncrementalForest, incremental.IncrementalStats]:
+    """Apply one batched insert/delete update to a solved forest.
+
+    The incremental pass (DESIGN.md §13): the updated graph is
+    :func:`repro.core.incremental.apply_edge_batch` of the inputs, the
+    surviving tree edges anchor a device-resident cycle/cut probe (one
+    fused mask readback per batch), and the Borůvka engine re-solves only
+    the un-certified candidates — the returned forest is bit-identical to
+    a from-scratch :func:`minimum_spanning_forest` of the updated graph,
+    at any shard count.  ``stats.updates_applied`` /
+    ``stats.replacement_probes`` meter the pass (runtime stats protocol).
+    """
+    return incremental.apply_updates(
+        forest, edge_batch, params=params, mesh=mesh, max_rounds=max_rounds)
 
 
 def warm_bucket(

@@ -130,14 +130,25 @@ class GHSParams:
                                       # single recursion (a second
                                       # sample→solve→filter pass over the
                                       # survivors).  0 = auto: 4·num_vertices.
+    # Incremental updates (DESIGN.md §13) — core/incremental.apply_updates.
+    update_levels: int = 0            # threshold levels of the incremental
+                                      # cycle probe (anchor-forest labels per
+                                      # key quantile, plus the packed max-key
+                                      # bound).  More levels → fewer
+                                      # candidates reach the final solve;
+                                      # never affects correctness.
+                                      # 0 = follow filter_levels.
     # Serving knobs (DESIGN.md §12) — launch/serve.py continuous batching.
     serve_lanes: int = 8              # dispatch batch size: a bucket queue
                                       # flushes when it holds this many
                                       # graphs (or its deadline expires);
-                                      # flushes always pad to EXACTLY this
-                                      # many lanes with ghost graphs so one
-                                      # warmed executable per bucket shape
-                                      # serves every flush
+                                      # part-full flushes dispatch at the
+                                      # pow2-rounded OCCUPIED lane count
+                                      # (ghost-padded up to it, capped
+                                      # here), so a solo deadline flush
+                                      # pays a width-1 solve, not a
+                                      # full-width one — warmup traces
+                                      # every such width per bucket shape
     serve_max_wait_ms: float = 50.0   # deadline: the oldest queued request
                                       # waits at most this long before its
                                       # bucket is flushed part-full

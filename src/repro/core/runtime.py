@@ -102,6 +102,13 @@ class EngineStats:
     connectivity probe and the number of sample→solve→filter passes run.
     Engines without a filter stage leave them 0.
 
+    ``updates_applied`` / ``replacement_probes`` are filled by the
+    incremental pass (DESIGN.md §13): structural edge changes actually
+    applied by an :func:`repro.core.incremental.apply_updates` batch, and
+    the cut-probe candidates — non-tree edges crossing components severed
+    by tree-edge deletions, the pool the final solve elects replacement
+    edges from.  Solve-from-scratch engines leave them 0.
+
     Overlap-aware accounting (DESIGN.md §11): ``host_syncs`` and
     ``intervals`` always count CONSUMED readbacks/dispatches, so the
     contract above is pipeline-invariant.  ``overlapped_syncs`` counts the
@@ -121,6 +128,8 @@ class EngineStats:
     rounds_per_graph: tuple = ()
     edges_filtered: int = 0
     filter_passes: int = 0
+    updates_applied: int = 0
+    replacement_probes: int = 0
     overlapped_syncs: int = 0
     speculative_intervals: int = 0
     comm_bytes: int = 0

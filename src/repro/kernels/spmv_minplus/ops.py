@@ -227,6 +227,56 @@ def connected_labels(
     return comp
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "num_vertices", "axis_name", "use_pallas", "interpret",
+    "collective", "cand_cap", "num_shards"))
+def component_maxkey(
+    src: jnp.ndarray, dst: jnp.ndarray, key: jnp.ndarray,
+    active: jnp.ndarray, *,
+    num_vertices: int, init: "jnp.ndarray | None" = None,
+    axis_name: "str | None" = None,
+    use_pallas: bool = False, interpret: bool = True,
+    collective: str = "pmin", cand_cap: "int | None" = None,
+    num_shards: int = 1,
+) -> "tuple[jnp.ndarray, jnp.ndarray]":
+    """Packed max-key variant of :func:`connected_labels`.
+
+    Runs the same warm-started hook/shortcut loop to convergence, then one
+    scatter-MAX of the packed (weight ‖ edge-id) uint64 keys onto the
+    converged labels.  Returns ``(comp, maxkey)`` where ``maxkey[v]`` is
+    the maximum key of any active edge inside ``v``'s component (0 where
+    the component has no active edge — 0 is unreachable by a live key
+    because engine weights are positive).
+
+    This is the swap bound of the incremental cycle rule (DESIGN.md §13):
+    the component max dominates every tree-path max, so a probe edge whose
+    endpoints share a component and whose key exceeds ``maxkey`` is the
+    strict maximum of a cycle — provably non-MSF.  All comparisons happen
+    in ONE graph's key space, so the bound is exact under weight ties too.
+
+    ``init`` warm-starts the label loop exactly as in
+    :func:`connected_labels` (the incremental pass seeds it with the top
+    threshold level's labels, so the loop converges without iterating).
+    Under ``shard_map`` the per-shard scatter-max combines with
+    ``lax.pmax`` — exact max, so the replicated labels and bounds stay
+    bit-identical at any shard count.
+    """
+    n = num_vertices
+    comp = connected_labels(
+        src, dst, active, num_vertices=n, init=init, axis_name=axis_name,
+        use_pallas=use_pallas, interpret=interpret, collective=collective,
+        cand_cap=cand_cap, num_shards=num_shards)
+    # Active edges never cross components at convergence, so one endpoint
+    # names the segment; inactive/padding lanes are dropped out of range.
+    seg = comp[jnp.clip(src, 0, n - 1)]
+    mx = jnp.zeros((n,), jnp.uint64).at[
+        jnp.where(active, seg, n)
+    ].max(jnp.where(active, key, jnp.uint64(0)), mode="drop")
+    if axis_name is not None:
+        mx = jax.lax.pmax(mx, axis_name)
+    return comp, mx[comp]
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def shortcut_relabel(
     parent: jnp.ndarray, comp: jnp.ndarray, *,
@@ -240,4 +290,6 @@ def shortcut_relabel(
     """
     if not use_pallas:
         return ref.shortcut_relabel(parent, comp)
-    return pointer_jump(parent, comp, interpret=interpret)
+    # The kernel computes in uint32 lanes; callers carry int32 labels
+    # through while_loops, so restore the label dtype.
+    return pointer_jump(parent, comp, interpret=interpret).astype(comp.dtype)

@@ -11,11 +11,23 @@ waited ``params.serve_max_wait_ms`` — whichever comes first — packs it with
 :func:`repro.core.mst_api.solve_packed`, and completes the requests'
 futures in arrival order.
 
-Every flush dispatches EXACTLY ``serve_lanes`` lanes: part-full deadline
-flushes are padded with inert ghost graphs (single vertex, no edges), so
-one warmed executable per bucket shape serves every flush.
-:meth:`MSTService.warmup` precompiles the pow2 shape lattice up to
-``batch_max_vertices`` / ``batch_max_edges`` at startup.
+Part-full flushes dispatch at the pow2-rounded OCCUPIED lane count (ghost
+graphs — single vertex, no edges — pad only up to that width, capped at
+``serve_lanes``): a solo deadline flush pays a width-1 solve instead of a
+full-width one, which is what keeps the LOW-rate regime's mean latency near
+its p50 (the fixed-width policy drove it to ~21x p50 — see BENCH_serving
+history).  :meth:`MSTService.warmup` precompiles the pow2 shape lattice up
+to ``batch_max_vertices`` / ``batch_max_edges`` at startup, at EVERY
+adaptive flush width per shape, so no runtime flush compiles.
+
+Update requests (DESIGN.md §13) share the same bucket/flush/backpressure
+path: :meth:`MSTService.submit_update` merges the edge batch at admission
+(the updated graph routes the bucket and trips the same oversize guard),
+queues it under an update-kind bucket key, and the flush plans every
+request's cycle/cut probe, solves all candidate subgraphs through ONE
+batched ``minimum_spanning_forests`` dispatch, and completes the futures
+with new :class:`~repro.core.incremental.IncrementalForest` handles —
+each bit-identical to a standalone ``mst_api.apply_updates`` call.
 
 Backpressure (PR 4's capacity guards made online): an oversized graph is
 shed at submit with :class:`OversizeError`, a full bucket queue sheds with
@@ -43,10 +55,15 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import mst_api, pipeline, runtime
+from repro.core import incremental, mst_api, pipeline, runtime
 from repro.core.graph import Graph
 from repro.core.params import DEFAULT_PARAMS, GHSParams
 from repro.core.partition import pow2ceil
+
+# Trailing-window size of the ServeStats latency ledger: enough samples for
+# stable p50/p99 estimates, bounded so a long-running service cannot grow
+# without bound (the ``completed`` counter stays exact forever).
+LATENCY_WINDOW = 4096
 
 
 class ShedError(RuntimeError):
@@ -82,11 +99,20 @@ class ServeStats:
     ``serve_lanes``; ``deadline_flushes`` — the oldest request aged past
     ``serve_max_wait_ms``; ``drain_flushes`` — explicit :meth:`drain`),
     ``ghost_lanes`` padded into part-full flushes, ``max_queue_depth``
-    high-water mark across buckets, and ``buckets_warmed`` executables
-    precompiled at startup.  ``latencies_ms`` holds one submit→complete
-    measurement per served request; :meth:`percentile` / :meth:`summary`
-    reduce it to the SLO numbers (p50/p99).  ``graphs_per_s`` is filled by
-    the drivers that know wall-clock span (:func:`run_poisson`)."""
+    high-water mark across buckets, ``buckets_warmed`` executables
+    precompiled at startup, and ``update_requests`` /
+    ``updates_applied`` / ``replacement_probes`` metering the
+    incremental-update kind (DESIGN.md §13, summed from the per-request
+    :class:`~repro.core.runtime.EngineStats` ledger fields).
+
+    ``latencies_ms`` holds one submit→complete measurement per served
+    request over a TRAILING window of :data:`LATENCY_WINDOW` samples (a
+    bounded deque — a long soak stays memory-flat); :meth:`percentile` /
+    :meth:`summary` reduce it to the SLO numbers (p50/p99) and report
+    ``latency_samples`` alongside the exact ``completed`` count, so the
+    window is never mistaken for the population.  ``graphs_per_s`` is
+    filled by the drivers that know wall-clock span
+    (:func:`run_poisson`)."""
 
     accepted: int = 0
     completed: int = 0
@@ -98,8 +124,16 @@ class ServeStats:
     ghost_lanes: int = 0
     max_queue_depth: int = 0
     buckets_warmed: int = 0
+    update_requests: int = 0
+    updates_applied: int = 0
+    replacement_probes: int = 0
     graphs_per_s: float = 0.0
-    latencies_ms: list = dataclasses.field(default_factory=list)
+    latencies_ms: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+
+    def record_latency(self, ms: float) -> None:
+        """Append one sample; the deque evicts beyond the window."""
+        self.latencies_ms.append(ms)
 
     @property
     def shed(self) -> int:
@@ -116,6 +150,7 @@ class ServeStats:
         return self.shed / offered if offered else 0.0
 
     def percentile(self, q: float) -> float:
+        """Percentile over the trailing :data:`LATENCY_WINDOW` samples."""
         if not self.latencies_ms:
             return float("nan")
         return float(np.percentile(np.asarray(self.latencies_ms), q))
@@ -134,9 +169,12 @@ class ServeStats:
             "ghost_lanes": self.ghost_lanes,
             "max_queue_depth": self.max_queue_depth,
             "buckets_warmed": self.buckets_warmed,
+            "update_requests": self.update_requests,
+            "latency_samples": len(self.latencies_ms),
             "p50_ms": round(self.percentile(50), 3),
             "p99_ms": round(self.percentile(99), 3),
-            "mean_ms": (round(float(np.mean(self.latencies_ms)), 3)
+            "mean_ms": (round(float(np.mean(np.asarray(self.latencies_ms))),
+                              3)
                         if self.latencies_ms else float("nan")),
             "graphs_per_s": round(self.graphs_per_s, 2),
         }
@@ -144,9 +182,14 @@ class ServeStats:
 
 @dataclasses.dataclass
 class _Request:
-    graph: Graph
+    graph: Graph            # solve kind: the input; update kind: the merged
+                            # (updated) graph that routed the bucket
     future: Future
     t_submit: float
+    # Update-kind payload (None on solve requests): the handle to evolve
+    # and the edge batch to apply at flush time.
+    forest: "Optional[incremental.IncrementalForest]" = None
+    edge_batch: "Optional[incremental.EdgeBatch]" = None
 
 
 class MSTService:
@@ -220,6 +263,51 @@ class MSTService:
                                          len(q))
         return fut
 
+    def submit_update(
+        self,
+        forest: "incremental.IncrementalForest",
+        edge_batch: "incremental.EdgeBatch",
+        *,
+        t_arrival: Optional[float] = None,
+    ) -> Future:
+        """Admit one incremental update (DESIGN.md §13); returns a future
+        resolving to the NEW :class:`~repro.core.incremental.IncrementalForest`
+        handle, bit-identical to ``mst_api.apply_updates`` on the inputs.
+
+        The edge batch is merged here (host glue) so the UPDATED graph
+        routes the bucket and trips the same ``OversizeError`` guard as a
+        solve; update buckets queue separately from solve buckets (an
+        update-kind key) but share the size-or-deadline flush, the
+        ``serve_max_queue`` bound, and the stats ledger.  Malformed
+        batches (endpoints/weights out of range) raise ``ValueError`` at
+        the caller — that is an input bug, not backpressure."""
+        p = self.params
+        g2 = incremental.apply_edge_batch(forest.graph, edge_batch)
+        try:
+            shape = ("update",) + pipeline.bucket_shape(
+                g2.num_vertices, g2.num_edges, bucket=p.batch_bucket,
+                max_vertices=p.batch_max_vertices or None,
+                max_edges=p.batch_max_edges or None)
+        except ValueError as e:
+            self.stats.shed_oversize += 1
+            raise OversizeError(str(e)) from None
+        q = self._queues.setdefault(shape, deque())
+        if len(q) >= p.serve_max_queue:
+            self.stats.shed_queue_full += 1
+            raise QueueFullError(
+                f"bucket {shape} queue is full "
+                f"({p.serve_max_queue} pending)")
+        fut: Future = Future()
+        q.append(_Request(graph=g2, future=fut,
+                          t_submit=(self._clock() if t_arrival is None
+                                    else float(t_arrival)),
+                          forest=forest, edge_batch=edge_batch))
+        self.stats.accepted += 1
+        self.stats.update_requests += 1
+        self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                         len(q))
+        return fut
+
     # -- dispatch ----------------------------------------------------------
 
     def queue_depth(self, shape: Optional[tuple] = None) -> int:
@@ -230,7 +318,13 @@ class MSTService:
     def poll(self, now: Optional[float] = None) -> int:
         """Run the dispatcher once: flush every bucket that is full
         (``serve_lanes``) or whose oldest request has waited past
-        ``serve_max_wait_ms``.  Returns the number of flushes."""
+        ``serve_max_wait_ms``.  Returns the number of flushes.
+
+        A caller-injected ``now`` (virtual clock) is threaded through to
+        the flushes' completion stamps, so latency ledgers never mix
+        timebases; with no injection, completion is stamped from the real
+        clock AFTER the solve (the solve's own wall time counts)."""
+        injected = now is not None
         if now is None:
             now = self._clock()
         p = self.params
@@ -239,51 +333,115 @@ class MSTService:
         for shape, q in list(self._queues.items()):
             while len(q) >= p.serve_lanes:
                 self.stats.size_flushes += 1
-                self._flush(shape, q)
+                self._flush(shape, q, now=now if injected else None)
                 flushed += 1
             if q and now - q[0].t_submit >= wait_s:
                 self.stats.deadline_flushes += 1
-                self._flush(shape, q)
+                self._flush(shape, q, now=now if injected else None)
                 flushed += 1
         return flushed
 
-    def drain(self) -> int:
+    def drain(self, now: Optional[float] = None) -> int:
         """Flush every non-empty bucket regardless of size or deadline
-        (shutdown / end-of-stream).  Returns the number of flushes."""
+        (shutdown / end-of-stream).  Returns the number of flushes.
+        ``now`` threads a virtual completion stamp exactly as in
+        :meth:`poll`."""
         flushed = 0
         for shape, q in list(self._queues.items()):
             while q:
                 self.stats.drain_flushes += 1
-                self._flush(shape, q)
+                self._flush(shape, q, now=now)
                 flushed += 1
         return flushed
 
-    def _flush(self, shape: tuple, q: deque) -> None:
+    def _flush(self, shape: tuple, q: deque,
+               now: Optional[float] = None) -> None:
         p = self.params
         reqs = [q.popleft() for _ in range(min(len(q), p.serve_lanes))]
-        ghosts = p.serve_lanes - len(reqs)
+        if shape[0] == "update":
+            results = self._solve_updates(reqs)
+        else:
+            results = self._solve_graphs(shape, reqs)
+        # Completion stamp: the injected virtual time when the dispatcher
+        # was driven with one (poll(now=...) — a single timebase for the
+        # whole ledger), else the real clock AFTER the solve.
+        done = self._clock() if now is None else now
+        # Requests left the FIFO in arrival order; their futures complete
+        # in that same order (ghost lanes have no future to complete).
+        for r, res in zip(reqs, results):
+            self.stats.completed += 1
+            self.stats.record_latency((done - r.t_submit) * 1e3)
+            r.future.set_result(res)
+
+    def _dispatch_params(self, n_pad: int) -> GHSParams:
+        """Solving params for one flush: a run-to-completion interval
+        (``batch_check_frequency >= n_pad + 2``, the round bound) so the
+        bucket converges in ONE dispatch — one readback per flush, and the
+        mid-solve compaction ladder never runs, which keeps the warmed
+        lattice at one executable per (shape, width).  (The default
+        short-interval policy exists for throughput-scale batched solves,
+        where per-interval contraction amortizes; at serving shapes it
+        would instead demand O(shapes · ladder²) warmed executables —
+        enough JIT code mappings to exhaust ``vm.max_map_count``.)  A
+        user-set longer interval is kept."""
+        p = self.params
+        return dataclasses.replace(
+            p, batch_check_frequency=max(p.batch_check_frequency,
+                                         n_pad + 2))
+
+    def _solve_graphs(self, shape: tuple, reqs: list) -> list:
+        """One packed bucket dispatch at the pow2-rounded occupied width."""
+        p = self.params
+        lanes = min(pow2ceil(len(reqs)), p.serve_lanes)
+        ghosts = lanes - len(reqs)
         graphs = [r.graph for r in reqs] + \
             [_ghost_graph() for _ in range(ghosts)]
         n_pad, cap = shape
         batch = pipeline.pack_bucket(graphs, n_pad, cap)
         results, _ = mst_api.solve_packed(
-            batch, params=p, max_rounds=self._max_rounds)
-        done = self._clock()
+            batch, params=self._dispatch_params(n_pad),
+            max_rounds=self._max_rounds)
         self.stats.ghost_lanes += ghosts
-        # Requests left the FIFO in arrival order; their futures complete
-        # in that same order (ghost lanes have no future to complete).
-        for r, res in zip(reqs, results):
-            self.stats.completed += 1
-            self.stats.latencies_ms.append((done - r.t_submit) * 1e3)
-            r.future.set_result(res)
+        return results[:len(reqs)]
+
+    def _solve_updates(self, reqs: list) -> list:
+        """Plan every update's cycle/cut probe, then solve ALL candidate
+        subgraphs through one batched dispatch (DESIGN.md §13) — each lane
+        bit-identical to a standalone ``mst_api.apply_updates``."""
+        p = self.params
+        plans = [incremental.plan_updates(r.forest, r.edge_batch,
+                                          params=p, updated=r.graph)
+                 for r in reqs]
+        forests, _ = mst_api.minimum_spanning_forests(
+            [pl.sub for pl in plans], params=p,
+            max_rounds=self._max_rounds)
+        out = []
+        for pl, f in zip(plans, forests):
+            self.stats.updates_applied += pl.stats.updates_applied
+            self.stats.replacement_probes += pl.stats.replacement_probes
+            out.append(incremental.finalize_plan(pl, f))
+        return out
 
     # -- warmup ------------------------------------------------------------
 
+    def flush_widths(self) -> list:
+        """The lane widths an adaptive flush can dispatch at: every power
+        of two below ``serve_lanes``, plus ``serve_lanes`` itself (a full
+        or over-rounded flush caps there — ``min(pow2ceil(occupied),
+        serve_lanes)`` can produce no other value)."""
+        widths, w = [], 1
+        while w < self.params.serve_lanes:
+            widths.append(w)
+            w *= 2
+        widths.append(self.params.serve_lanes)
+        return widths
+
     def warmup(self) -> int:
         """Precompile the pow2 bucket lattice: every ``(n_pad, cap)`` shape
-        up to ``batch_max_vertices`` / ``batch_max_edges``, each at exactly
-        ``serve_lanes`` lanes — after this, no runtime flush of an
-        admissible request compiles anything.  Per shape,
+        up to ``batch_max_vertices`` / ``batch_max_edges``, at every
+        adaptive flush width (:meth:`flush_widths`) — after this, no
+        runtime flush of an admissible solve request compiles anything,
+        full-width or part-full.  Per (shape, width),
         :func:`repro.core.mst_api.warm_bucket` traces the vmapped interval
         fn at the load cap AND at every pow2 compaction cap below it, plus
         the shrink slices between them (the interval fn's cache key carries
@@ -292,20 +450,26 @@ class MSTService:
         (0, 1), so the bit-gate resolves identically for empty warm lanes
         and real traffic).  Requires bounded capacities and the ``"pow2"``
         policy (``"exact"`` shapes are unbounded — they compile on first
-        flush); returns the number of bucket shapes warmed."""
+        flush); returns the number of (shape, width) executables warmed.
+        Update-kind flushes are not warmed here: their candidate subgraph
+        shapes depend on the traffic's graphs, so they compile on first
+        use like ``"exact"`` buckets."""
         p = self.params
         if (p.batch_bucket != "pow2" or not p.batch_max_vertices
                 or not p.batch_max_edges):
             return 0
         n_top = pow2ceil(p.batch_max_vertices)
         cap_top = pow2ceil(max(p.batch_max_edges, 8))
+        widths = self.flush_widths()
         warmed = 0
         n_pad = 1
         while n_pad <= n_top:
+            wp = self._dispatch_params(n_pad)
             cap = 8
             while cap <= cap_top:
-                mst_api.warm_bucket(p.serve_lanes, n_pad, cap, params=p)
-                warmed += 1
+                for lanes in widths:
+                    mst_api.warm_bucket(lanes, n_pad, cap, params=wp)
+                    warmed += 1
                 cap *= 2
             n_pad *= 2
         self.stats.buckets_warmed = warmed

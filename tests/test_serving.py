@@ -6,11 +6,11 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import generators, kruskal_ref, mst_api, pipeline
+from repro.core import generators, incremental, kruskal_ref, mst_api, pipeline
 from repro.core.graph import preprocess
 from repro.core.params import GHSParams
-from repro.launch.serve import (MSTService, OversizeError, QueueFullError,
-                                run_poisson)
+from repro.launch.serve import (LATENCY_WINDOW, MSTService, OversizeError,
+                                QueueFullError, ServeStats, run_poisson)
 
 
 class FakeClock:
@@ -72,18 +72,20 @@ def test_size_flush_fires_without_time_passing():
         _assert_oracle(g, f.result())
 
 
-def test_deadline_flush_pads_ghost_lanes():
+def test_deadline_flush_dispatches_at_occupied_width():
     clock = FakeClock()
     svc = MSTService(_params(), clock=clock)
     fut = svc.submit(_g(7))
     # Under the deadline: nothing moves, however often we poll.
     assert svc.poll(now=0.049) == 0
     assert not fut.done()
-    # At the deadline: the part-full bucket flushes, padded to 3 lanes.
+    # At the deadline: the solo flush dispatches at width 1 — no ghost
+    # lanes (the adaptive policy; the fixed-width one padded to 3 and
+    # drove the low-rate mean to ~21x p50, BENCH_serving history).
     assert svc.poll(now=0.050) == 1
     assert svc.stats.deadline_flushes == 1
     assert svc.stats.size_flushes == 0
-    assert svc.stats.ghost_lanes == 2
+    assert svc.stats.ghost_lanes == 0
     assert fut.done()
     _assert_oracle(_g(7), fut.result())
 
@@ -94,11 +96,25 @@ def test_deadline_measured_from_oldest_request():
     svc.submit(_g(_POOL[0]))                 # t = 0
     clock.advance(0.04)
     svc.submit(_g(_POOL[1]))                 # t = 0.04, same bucket
-    # 10 ms later the OLDEST is 50 ms old: both flush together.
+    # 10 ms later the OLDEST is 50 ms old: both flush together at the
+    # exact pow2 width 2 — again no ghosts.
     assert svc.poll(now=0.050) == 1
     assert svc.stats.deadline_flushes == 1
     assert svc.stats.completed == 2
-    assert svc.stats.ghost_lanes == 1
+    assert svc.stats.ghost_lanes == 0
+
+
+def test_partial_flush_rounds_to_pow2_width():
+    # 5 occupied lanes under serve_lanes=8 → pow2ceil(5)=8... use 3-of-4:
+    # serve_lanes=4, 3 requests → width 4, one ghost.
+    clock = FakeClock()
+    svc = MSTService(_params(serve_lanes=4, serve_max_queue=8),
+                     clock=clock)
+    futs = [svc.submit(g) for g in _same_bucket(3)]
+    assert svc.poll(now=0.050) == 1
+    assert svc.stats.ghost_lanes == 1        # padded to pow2ceil(3) = 4
+    for g, f in zip(_same_bucket(3), futs):
+        _assert_oracle(g, f.result())
 
 
 def test_bit_identical_to_single_graph_solve():
@@ -189,12 +205,46 @@ def test_service_rejects_inconsistent_knobs():
 def test_warmup_covers_the_pow2_lattice():
     p = _params(batch_max_vertices=8, batch_max_edges=16)
     svc = MSTService(p, clock=FakeClock())
-    # n_pad in {1, 2, 4, 8} x cap in {8, 16} = 8 shapes.
-    assert svc.warmup() == 8
-    assert svc.stats.buckets_warmed == 8
+    # n_pad in {1, 2, 4, 8} x cap in {8, 16} = 8 shapes, each warmed at
+    # every adaptive flush width {1, 2, 3} (serve_lanes=3).
+    assert svc.flush_widths() == [1, 2, 3]
+    assert svc.warmup() == 24
+    assert svc.stats.buckets_warmed == 24
     # Warmup solves ghosts only: no request counters move.
     assert svc.stats.accepted == svc.stats.completed == 0
     assert svc.stats.flushes == 0
+
+
+def test_serve_dispatch_runs_to_completion():
+    # A flush's solve must converge inside ONE dispatch (one readback, no
+    # mid-solve compaction): the shrink ladder's recompiles can then never
+    # land inside a request's latency, and warmup needs exactly one
+    # executable per (shape, width).
+    svc = MSTService(_params(), clock=FakeClock())
+    dp = svc._dispatch_params(16)
+    assert dp.batch_check_frequency >= 16 + 2
+    graphs = _same_bucket(3)
+    batch = pipeline.pack_bucket(graphs, 16, 32)
+    results, st = mst_api.solve_packed(batch, params=dp)
+    assert st.intervals == 1
+    assert st.compactions == 0
+    for g, res in zip(graphs, results):
+        _assert_oracle(g, res)
+
+
+def test_interval_fn_cache_holds_a_serving_lattice():
+    # Warmup's value lives inside the per-contract_bits jit objects:
+    # evicting one from the builder cache destroys every executable
+    # compiled through it, re-paying those compiles mid-request.  A
+    # 256-vertex/1024-edge lattice has ~60 distinct (s_bits, c_bits)
+    # combos; pin that the builder cache retains a full lattice's worth
+    # (regression: maxsize=16 silently discarded most of the warmup —
+    # first-encounter flushes then stalled for seconds under load).
+    from repro.core.boruvka_dist import _build_batch_interval_fn
+    combos = [(s, c) for s in range(1, 9) for c in range(3, 11)]
+    fns = [_build_batch_interval_fn(False, bits) for bits in combos]
+    for bits, fn in zip(combos, fns):
+        assert _build_batch_interval_fn(False, bits) is fn
 
 
 def test_warmup_skips_unbounded_and_exact_policies():
@@ -224,6 +274,128 @@ def test_run_poisson_virtual_time_deterministic():
     for g, f in zip(graphs, futs):
         if f is not None:
             _assert_oracle(g, f.result())
+
+
+# ---------------------------------------------------------------------------
+# Latency ledger: virtual timebase + bounded window
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_latency_single_timebase():
+    # Regression: _flush used to stamp completion with self._clock() even
+    # when poll(now=...) drove the dispatcher in virtual time, mixing
+    # timebases (a FakeClock pinned at 0 recorded ~0ms for a 50ms wait).
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    svc.submit(_g(7))                        # t_submit = clock() = 0.0
+    assert svc.poll(now=0.050) == 1
+    assert svc.stats.latencies_ms[-1] == pytest.approx(50.0)
+    # drain(now=...) threads the same stamp.
+    svc.submit(_g(8), t_arrival=0.050)
+    assert svc.drain(now=0.075) == 1
+    assert svc.stats.latencies_ms[-1] == pytest.approx(25.0)
+
+
+def test_real_clock_latency_includes_solve_time():
+    # Without an injected now, completion is stamped AFTER the solve from
+    # the service clock — a fake clock advanced between submit and poll
+    # shows the elapsed time; it is never stamped from poll entry.
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    svc.submit(_g(7))
+    clock.advance(0.2)
+    assert svc.poll() == 1                   # deadline long expired
+    assert svc.stats.latencies_ms[-1] == pytest.approx(200.0)
+
+
+def test_latency_window_soak_stays_memory_flat():
+    # A million-request soak must not grow the ledger without bound.
+    stats = ServeStats()
+    for i in range(1_000_000):
+        stats.record_latency(float(i % 97))
+        stats.completed += 1
+    assert len(stats.latencies_ms) == LATENCY_WINDOW
+    s = stats.summary()
+    assert s["completed"] == 1_000_000       # exact count survives
+    assert s["latency_samples"] == LATENCY_WINDOW
+    # Percentiles are over the trailing window and stay finite.
+    assert 0.0 <= stats.percentile(50) <= 96.0
+    assert s["mean_ms"] == pytest.approx(
+        float(np.mean(np.asarray(stats.latencies_ms))), abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Update-request kind (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _batch_for(state, rng):
+    n = state.graph.num_vertices
+    ins = [(int(rng.integers(n)), int(rng.integers(n)),
+            float(rng.uniform(0.01, 0.99))) for _ in range(4)]
+    tree = np.flatnonzero(state.forest.edge_mask)
+    dele = [(int(state.graph.src[i]), int(state.graph.dst[i]))
+            for i in rng.choice(tree, min(2, tree.size), replace=False)]
+    return incremental.EdgeBatch.make(ins, dele)
+
+
+def test_update_requests_share_flush_and_match_apply_updates():
+    rng = np.random.default_rng(3)
+    clock = FakeClock()
+    svc = MSTService(_params(serve_max_queue=8), clock=clock)
+    states = [mst_api.incremental_forest(_g(s))[0] for s in _POOL[:3]]
+    batches = [_batch_for(st, rng) for st in states]
+    futs = [svc.submit_update(st, b) for st, b in zip(states, batches)]
+    assert not any(f.done() for f in futs)   # submit never dispatches
+    assert svc.stats.update_requests == 3
+    assert svc.poll(now=0.0) == 1            # full at serve_lanes=3
+    assert svc.stats.size_flushes == 1
+    for st, b, f in zip(states, batches, futs):
+        got = f.result()
+        want, _ = mst_api.apply_updates(st, b)
+        assert np.array_equal(got.forest.edge_mask, want.forest.edge_mask)
+        assert got.forest.total_weight == want.forest.total_weight
+    assert svc.stats.updates_applied > 0
+    assert svc.stats.completed == 3
+
+
+def test_update_and_solve_buckets_coexist():
+    rng = np.random.default_rng(4)
+    clock = FakeClock()
+    svc = MSTService(_params(), clock=clock)
+    g = _g(11)
+    state, _ = mst_api.incremental_forest(_g(12))
+    batch = _batch_for(state, rng)
+    f_solve = svc.submit(g)
+    f_upd = svc.submit_update(state, batch)
+    assert len(svc._queues) == 2             # distinct kinds, own queues
+    assert svc.drain(now=0.0) == 2
+    _assert_oracle(g, f_solve.result())
+    want, _ = mst_api.apply_updates(state, batch)
+    assert np.array_equal(f_upd.result().forest.edge_mask,
+                          want.forest.edge_mask)
+
+
+def test_update_oversize_shed_is_typed():
+    # Base graph fits the cap; the insert batch pushes it over.
+    base = preprocess(np.arange(4), np.arange(4) + 1,
+                      np.full(4, 0.5, np.float32), 16)
+    state, _ = mst_api.incremental_forest(base)
+    svc = MSTService(_params(batch_max_edges=8), clock=FakeClock())
+    big = incremental.EdgeBatch.make(
+        [(i, (i + 7) % 16, 0.5 + i * 1e-3) for i in range(16)
+         if i != (i + 7) % 16], [])
+    with pytest.raises(OversizeError, match="exceeds pack_batch capacity"):
+        svc.submit_update(state, big)
+    assert svc.stats.shed_oversize == 1
+    assert svc.stats.accepted == 0
+
+
+def test_update_bad_batch_raises_value_error_not_shed():
+    state, _ = mst_api.incremental_forest(_g(5))
+    svc = MSTService(_params(), clock=FakeClock())
+    bad = incremental.EdgeBatch.make([(0, 10**6, 0.5)], [])
+    with pytest.raises(ValueError, match="endpoints"):
+        svc.submit_update(state, bad)
+    assert svc.stats.shed == 0               # input bug, not backpressure
 
 
 # ---------------------------------------------------------------------------
